@@ -1,0 +1,49 @@
+"""Paper Fig. 10: performance vs #PEs within a fixed number of PCs.
+
+Adaptation (DESIGN.md §2): with memory channels fixed at D devices,
+adding PEs = assigning more graph shards per device (Q = k*D, k PEs per
+PC): each extra shard is an extra consumer of the same channel, exactly
+the paper's PG-internal parallelism.  The paper's break-point appears
+when the fixed channel saturates; here the fixed single core saturates,
+producing the same knee shape (absolute GTEPS are CPU numbers).
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_subprocess
+
+CODE = """
+import numpy as np, jax, json, time
+from repro.graph import get_dataset
+from repro.core import partition_graph
+from repro.core.bfs_distributed import DistributedBFS, DistConfig
+
+D, Q = {devices}, {shards}
+ds = get_dataset("{graph}")
+pg = partition_graph(ds.csr, ds.csc, Q)
+mesh = jax.make_mesh((D,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+# Q shards over D devices: leading shard axis splits Q/D per device
+eng = DistributedBFS(pg, mesh, cfg=DistConfig(dispatch="bitmap",
+                                              crossbar="flat"))
+deg = np.diff(ds.csr.indptr)
+root = int(np.argmax(deg))
+eng.run(root)
+t0 = time.perf_counter(); lev = eng.run(root); dt = time.perf_counter()-t0
+trav = int(deg[lev < (1<<30)].sum())
+print(json.dumps(dict(devices=D, shards=Q, pes_per_pc=Q//D,
+    seconds=round(dt,3), gteps=round(trav/dt/1e9, 5),
+    iters=eng.last_stats["iterations"])))
+"""
+
+
+def run(graphs=("rmat18-8", "rmat18-64"), devices: int = 4,
+        pes=(1, 2, 4, 8)) -> dict:
+    rows = []
+    for graph in graphs:
+        for k in pes:
+            out = run_subprocess(
+                CODE.format(devices=devices, shards=devices * k,
+                            graph=graph), devices=devices)
+            out["graph"] = graph
+            rows.append(out)
+    return {"rows": rows}

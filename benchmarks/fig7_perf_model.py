@@ -1,0 +1,46 @@
+"""Paper Fig. 7: theoretical single-PC performance vs #PEs (Eq. 1-6).
+
+Pure model evaluation with the paper's own constants (S_v=32b, F=100MHz,
+BW_MAX=13.27GB/s) — reproduces the published curves exactly, including the
+16-PE break-point — plus the TPU-v5e re-parameterization used by the
+roofline section.
+"""
+from __future__ import annotations
+
+from repro.core.perf_model import (PerfModelConfig, break_point_pes,
+                                   fig7_curves, full_crossbar_fifos,
+                                   multilayer_crossbar_fifos, perf_total,
+                                   tpu_model_teps)
+
+
+def run() -> dict:
+    pe_counts = (1, 2, 4, 8, 16, 32, 64, 128)
+    curves = fig7_curves(pe_counts=pe_counts)
+    rows = []
+    for ln, vals in curves.items():
+        rows.append({"len_nl": ln, **{f"pe{p}": round(v, 3)
+                                      for p, v in zip(pe_counts, vals)}})
+    bp = break_point_pes()
+    # paper §IV-D resource math: 64x64 full vs 3-layer 4x4 crossbar
+    fifos_full_64 = full_crossbar_fifos(64)
+    fifos_3l_64 = multilayer_crossbar_fifos((4, 4, 4))
+    fifos_full_16 = full_crossbar_fifos(16)
+    fifos_2l_16 = multilayer_crossbar_fifos((4, 4))
+    # paper peak config: 32 PC x (2 PE/PC), dense graph Len_nl=61
+    peak_model = perf_total(2, 32, 61.18) / 1e9
+    return {
+        "rows": rows,
+        "break_point_pes": bp,
+        "crossbar_fifos": {
+            "full_64x64": fifos_full_64, "threelayer_4x4x4": fifos_3l_64,
+            "full_16x16": fifos_full_16, "twolayer_4x4": fifos_2l_16,
+        },
+        "paper_peak_config_model_gteps": round(peak_model, 2),
+        "tpu_v5e_32chip_model_gteps": round(
+            tpu_model_teps(32, 61.18) / 1e9, 1),
+        "checks": {
+            "break_point_is_16": bp == 16,
+            "fifo_halving_64": fifos_3l_64 * 2 < fifos_full_64,
+            "fifo_halving_16": fifos_2l_16 * 2 == fifos_full_16,
+        },
+    }

@@ -1,0 +1,60 @@
+"""Paper Fig. 9: performance scaling with the number of HBM PCs.
+
+PC analogue = one mesh device owning one graph shard (DESIGN.md §2).  Each
+point runs in a subprocess with N forced host devices and N shards.
+
+This container has ONE physical core, so wall-clock cannot show the
+speedup a real pod would (all "devices" timeshare the core).  The
+structural scaling quantities are what we validate: per-device work
+(edges/shard) falls as 1/N with bounded imbalance (the paper's
+load-balance argument for hash partitioning), total edges inspected stays
+constant, and the level-synchronous iteration count is unchanged.  GTEPS
+is reported for reference.
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_subprocess
+
+CODE = """
+import numpy as np, jax, json
+from repro.graph import get_dataset
+from repro.core import bfs_oracle, partition_graph
+from repro.core.bfs_distributed import DistributedBFS, DistConfig
+import time
+
+N = {devices}
+ds = get_dataset("{graph}")
+pg = partition_graph(ds.csr, ds.csc, N)
+mesh = jax.make_mesh((N,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+eng = DistributedBFS(pg, mesh, cfg=DistConfig(dispatch="bitmap",
+                                              crossbar="flat"))
+deg = np.diff(ds.csr.indptr)
+root = int(np.argmax(deg))
+lev = eng.run(root)            # warm-up + correctness
+ok = bool(np.array_equal(np.minimum(lev, 1<<30),
+                         np.minimum(bfs_oracle(ds.csr, root), 1<<30)))
+t0 = time.perf_counter(); lev = eng.run(root); dt = time.perf_counter()-t0
+trav = int(deg[lev < (1<<30)].sum())
+per_shard = (pg.out_indptr[:, -1]).astype(float)
+print(json.dumps(dict(devices=N, ok=ok, seconds=round(dt,3),
+    gteps=round(trav/dt/1e9, 5), iters=eng.last_stats["iterations"],
+    inspected=eng.last_stats["edges_inspected"],
+    edges_per_shard_mean=float(per_shard.mean()),
+    edges_per_shard_max=float(per_shard.max()))))
+"""
+
+
+def run(graph: str = "rmat18-16", device_counts=(1, 2, 4, 8)) -> dict:
+    rows = []
+    for n in device_counts:
+        out = run_subprocess(CODE.format(devices=n, graph=graph), devices=n)
+        out["imbalance"] = round(
+            out["edges_per_shard_max"] / max(out["edges_per_shard_mean"],
+                                             1e-9), 3)
+        rows.append(out)
+    base = rows[0]
+    for r in rows:
+        r["work_per_shard_vs_1pc"] = round(
+            r["edges_per_shard_mean"] / base["edges_per_shard_mean"], 4)
+    return {"graph": graph, "rows": rows}

@@ -1,0 +1,65 @@
+"""§Roofline report: aggregate the dry-run sweep JSONs into the per-cell
+three-term table (EXPERIMENTS.md reads from this)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "experiments/dryrun")
+
+
+def load_cells(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(dryrun_dir: str = DRYRUN_DIR) -> dict:
+    rows, skipped, bfs_rows = [], [], []
+    for rec in load_cells(dryrun_dir):
+        name = f"{rec.get('arch')}|{rec.get('shape')}|{rec.get('mesh')}"
+        if "skipped" in rec:
+            skipped.append({"cell": name, "why": rec["skipped"]})
+            continue
+        if rec.get("kind") == "bfs":
+            for phase in ("push", "pull"):
+                p = rec.get(phase)
+                if not p:
+                    continue
+                r = p["roofline"]
+                bfs_rows.append({
+                    "cell": f"{name}|{phase}",
+                    "compute_ms": round(r["compute_s"] * 1e3, 4),
+                    "memory_ms": round(r["memory_s"] * 1e3, 4),
+                    "collective_ms": round(r["collective_s"] * 1e3, 4),
+                    "dominant": r["dominant"],
+                    "coll_bytes": int(p["per_device"]["collective_bytes"]),
+                })
+            continue
+        r = rec.get("roofline")
+        if not r:
+            continue
+        mem = rec.get("memory_analysis", {})
+        fits = (mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)) / 1e9
+        rows.append({
+            "cell": name,
+            "kind": rec["kind"],
+            "compute_ms": round(r["compute_s"] * 1e3, 3),
+            "memory_ms": round(r["memory_s"] * 1e3, 3),
+            "collective_ms": round(r["collective_s"] * 1e3, 3),
+            "dominant": r["dominant"],
+            "useful_ratio": round(r["useful_ratio"], 3),
+            "roofline_frac_pct": round(r["roofline_fraction"] * 100, 3),
+            "hbm_gb": round(fits, 2),
+            "compile_s": rec.get("compile_s"),
+        })
+    worst = sorted((r for r in rows if r["kind"] == "train"),
+                   key=lambda r: r["roofline_frac_pct"])[:5]
+    coll = sorted(rows, key=lambda r: -r["collective_ms"])[:5]
+    return {"rows": rows, "bfs_rows": bfs_rows, "skipped": skipped,
+            "worst_train_cells": [r["cell"] for r in worst],
+            "most_collective_bound": [r["cell"] for r in coll]}

@@ -1,0 +1,28 @@
+"""Batched-serving example: prefill + greedy decode on a reduced config,
+same serve_step the 32k/500k dry-run cells lower.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch llama3.2-3b]
+"""
+import argparse
+import json
+
+from repro.launch.serve import greedy_decode
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-tokens", type=int, default=16)
+    args = ap.parse_args()
+    out = greedy_decode(args.arch, reduced=True, batch=args.batch,
+                        prompt_len=args.prompt_len,
+                        gen_tokens=args.gen_tokens)
+    print(json.dumps(out, indent=2))
+    assert out["finite"]
+    print("OK: served a batch with finite logits")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from repro.core import bitmap
+from repro.core.bfs_local import (BFSResult, BFSRunner, LocalGraph,
+                                  bfs_oracle, bfs_reference,
+                                  build_local_graph)
+from repro.core.partition import PartitionedGraph, partition_graph
+from repro.core.scheduler import PULL, PUSH, SchedulerConfig, choose_mode
+
+__all__ = [
+    "bitmap", "BFSResult", "BFSRunner", "LocalGraph", "bfs_oracle",
+    "bfs_reference", "build_local_graph", "PartitionedGraph",
+    "partition_graph", "PULL", "PUSH", "SchedulerConfig", "choose_mode",
+]

@@ -1,0 +1,360 @@
+"""Distributed BFS over a device mesh (paper §IV, scaled to pods).
+
+One mesh device == one Processing Group bound to one memory channel; each
+device hosts ``k`` Processing Elements (k = shards per device), every PE
+owning one contiguous (reindexed) vertex interval — level array +
+visited/frontier bitmap shards live in the device's HBM, neighbor lists
+stream from that HBM only (the paper's locality rule; see DESIGN.md §2).
+``k`` is the paper's second scaling direction (PEs per PC, Fig. 10).
+
+Iteration structure (python-driven, each step a jitted shard_map program):
+
+  push:  P1 compact local frontiers (per PE) -> P2 expand local CSR
+         out-lists -> DISPATCH candidates to owners (crossbar analogue)
+         -> P3 receiver filters visited, updates bitmaps + levels.
+  pull:  all-gather the (bit-packed) current frontier
+         -> P1 compact local unvisited -> P2 expand local CSC in-lists,
+         test parent frontier bits -> P3 local update (no dispatch).
+
+Direction choice per iteration uses globally psum'd frontier statistics
+(the Scheduler broadcasting its decision to all PEs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import bitmap
+from repro.core.bfs_local import INF, compact_indices, expand_edges
+from repro.core.dispatcher import (or_reduce_scatter_flat,
+                                   or_reduce_scatter_staged, queue_dispatch,
+                                   received_to_local_bits)
+from repro.core.partition import PartitionedGraph, unreindex
+from repro.core.scheduler import PULL, PUSH, SchedulerConfig, choose_mode
+
+
+@dataclasses.dataclass
+class DistConfig:
+    dispatch: str = "bitmap"      # "bitmap" | "queue"
+    crossbar: str = "staged"      # "staged" (multi-layer) | "flat" (full)
+    edge_budget: int = 1 << 15    # per-shard expansion budget (auto-grows)
+    queue_capacity: int = 1 << 12  # per-destination FIFO depth (queue mode)
+    scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
+
+
+class DistributedBFS:
+    """BFS engine over `mesh`: Q = d*k vertex shards, k PEs per device."""
+
+    def __init__(self, pg: PartitionedGraph, mesh: jax.sharding.Mesh,
+                 axis_names: tuple[str, ...] | None = None,
+                 cfg: DistConfig | None = None):
+        self.pg = pg
+        self.mesh = mesh
+        self.axes = tuple(axis_names or mesh.axis_names)
+        self.axis_sizes = tuple(mesh.shape[a] for a in self.axes)
+        self.cfg = cfg or DistConfig()
+        q = pg.num_shards
+        d = int(np.prod(self.axis_sizes))
+        assert q % d == 0, f"shards {q} not a multiple of mesh size {d}"
+        self.d = d
+        self.k = q // d          # shards (PEs) per device (PC)
+        self.q = q
+        self.vl = pg.verts_per_shard          # local vertices per shard
+        self.wl = self.vl // bitmap.WORD_BITS  # local bitmap words
+        self.n_pad = pg.num_vertices_padded
+        spec = NamedSharding(mesh, P(self.axes))
+        put = lambda x: jax.device_put(jnp.asarray(x), spec)
+        # Shard-stacked graph arrays: leading axis Q splits across devices.
+        self.out_indptr = put(pg.out_indptr.astype(np.int32))
+        self.out_indices = put(pg.out_indices)
+        self.in_indptr = put(pg.in_indptr.astype(np.int32))
+        self.in_indices = put(pg.in_indices)
+        self._steps = {}
+
+    @classmethod
+    def abstract(cls, mesh: jax.sharding.Mesh, num_vertices: int,
+                 axis_names: tuple[str, ...] | None = None,
+                 cfg: DistConfig | None = None, align: int = 32,
+                 pes_per_device: int = 1):
+        """Spec-only engine for the multi-pod dry-run: no graph arrays are
+        materialized; the jitted step programs can be .lower()ed against
+        ShapeDtypeStruct inputs (see abstract_inputs)."""
+        self = cls.__new__(cls)
+        self.pg = None
+        self.mesh = mesh
+        self.axes = tuple(axis_names or mesh.axis_names)
+        self.axis_sizes = tuple(mesh.shape[a] for a in self.axes)
+        self.cfg = cfg or DistConfig()
+        d = int(np.prod(self.axis_sizes))
+        q = d * pes_per_device
+        self.d = d
+        self.k = pes_per_device
+        self.q = q
+        vl = (num_vertices + q - 1) // q
+        vl = ((vl + align - 1) // align) * align
+        self.vl = vl
+        self.wl = vl // bitmap.WORD_BITS
+        self.n_pad = q * vl
+        self._steps = {}
+        return self
+
+    def abstract_inputs(self, avg_degree: float = 16.0,
+                        pad_multiple: int = 128) -> dict:
+        """ShapeDtypeStruct stand-ins for one BFS step's inputs."""
+        e = int(self.vl * avg_degree)
+        e = max(((e + pad_multiple - 1) // pad_multiple) * pad_multiple,
+                pad_multiple)
+        sds = jax.ShapeDtypeStruct
+        return dict(
+            frontier=sds((self.q, self.wl), jnp.uint32),
+            visited=sds((self.q, self.wl), jnp.uint32),
+            level=sds((self.q, self.vl), jnp.int32),
+            lvl=sds((), jnp.int32),
+            indptr=sds((self.q, self.vl + 1), jnp.int32),
+            indices=sds((self.q, e), jnp.int32),
+        )
+
+    # -- sharded state helpers -------------------------------------------
+    def _sharding(self):
+        return NamedSharding(self.mesh, P(self.axes))
+
+    def init_state(self, root_reindexed: int):
+        s = self._sharding()
+        q, vl = self.q, self.vl
+        frontier = np.zeros((q, self.wl), np.uint32)
+        shard, local = root_reindexed // vl, root_reindexed % vl
+        frontier[shard, local // 32] = np.uint32(1) << (local % 32)
+        level = np.full((q, vl), int(INF), np.int32)
+        level[shard, local] = 0
+        return (jax.device_put(jnp.asarray(frontier), s),
+                jax.device_put(jnp.asarray(frontier), s),   # visited
+                jax.device_put(jnp.asarray(level), s))
+
+    # -- jitted sharded programs -----------------------------------------
+    # Every shard_map block is [k, ...]: k PE rows on this device.
+    def _specs(self):
+        return P(self.axes)
+
+    def _unpack_rows(self, words):
+        return jax.vmap(lambda w: bitmap.unpack(w, self.vl))(words)
+
+    def _stats_fn(self):
+        axes = self.axes
+
+        def stats(frontier, visited, out_indptr, in_indptr):
+            fmask = self._unpack_rows(frontier)            # [k, vl]
+            umask = ~self._unpack_rows(visited)
+            odeg = jnp.diff(out_indptr, axis=1)
+            ideg = jnp.diff(in_indptr, axis=1)
+            n_f = jax.lax.psum(jnp.sum(fmask, dtype=jnp.int32), axes)
+            m_f = jax.lax.psum(jnp.sum(jnp.where(fmask, odeg, 0),
+                                       dtype=jnp.int32), axes)
+            m_u = jax.lax.psum(jnp.sum(jnp.where(umask, ideg, 0),
+                                       dtype=jnp.int32), axes)
+            n_u = jax.lax.psum(jnp.sum(umask, dtype=jnp.int32), axes)
+            return n_f, m_f, m_u, n_u
+
+        sp = self._specs()
+        return jax.jit(shard_map(
+            stats, mesh=self.mesh,
+            in_specs=(sp, sp, sp, sp),
+            out_specs=(P(), P(), P(), P())))
+
+    def _push_fn(self, budget: int):
+        cfg, axes, sizes = self.cfg, self.axes, self.axis_sizes
+        vl, wl, n_pad = self.vl, self.wl, self.n_pad
+        d, k = self.d, self.k
+
+        def push(frontier, visited, level, lvl, out_indptr, out_indices):
+            fmask = self._unpack_rows(frontier)             # [k, vl]
+            active = jax.vmap(lambda m: compact_indices(m, vl)[0])(fmask)
+            _, nbr, valid, total = jax.vmap(
+                lambda a, ip, ix: expand_edges(a, ip, ix, budget))(
+                active, out_indptr, out_indices)            # nbr [k, budget]
+            overflow = jax.lax.psum(
+                jnp.any(total > budget).astype(jnp.int32), axes)
+            nbr_flat = nbr.reshape(-1)
+            if cfg.dispatch == "bitmap":
+                cand_global = bitmap.from_indices_dense(nbr_flat, n_pad)
+                if cfg.crossbar == "staged":
+                    cand_dev = or_reduce_scatter_staged(cand_global, axes,
+                                                        sizes)
+                else:
+                    cand_dev = or_reduce_scatter_flat(cand_global, axes, d)
+                cand_local = cand_dev.reshape(k, wl)
+                leftover = jnp.full((k, budget), -1, jnp.int32)
+            else:
+                sidx = _flat_axis_index(axes)
+                recv, leftover_f = queue_dispatch(nbr_flat, axes, d, k * vl,
+                                                  cfg.queue_capacity)
+                cand_local = received_to_local_bits(
+                    recv, sidx, k * vl).reshape(k, wl)
+                leftover = leftover_f.reshape(k, budget)
+            new = cand_local & ~visited
+            v2 = visited | new
+            new_mask = self._unpack_rows(new)
+            lev2 = jnp.where(new_mask, lvl + 1, level)
+            pending = jax.lax.psum(jnp.sum(leftover >= 0, dtype=jnp.int32),
+                                   axes)
+            return (new, v2, lev2, overflow,
+                    jax.lax.psum(jnp.sum(total), axes), pending, leftover)
+
+        sp = self._specs()
+        return jax.jit(shard_map(
+            push, mesh=self.mesh,
+            in_specs=(sp, sp, sp, P(), sp, sp),
+            out_specs=(sp, sp, sp, P(), P(), P(), sp)))
+
+    def _queue_drain_fn(self):
+        """Retry round for queue-mode overflow: dispatch leftover IDs."""
+        cfg, axes = self.cfg, self.axes
+        vl, wl, d, k = self.vl, self.wl, self.d, self.k
+
+        def drain(frontier, visited, level, lvl, leftover):
+            sidx = _flat_axis_index(axes)
+            recv, left2 = queue_dispatch(leftover.reshape(-1), axes, d,
+                                         k * vl, cfg.queue_capacity)
+            cand_local = received_to_local_bits(
+                recv, sidx, k * vl).reshape(k, wl)
+            new = cand_local & ~visited
+            v2 = visited | new
+            new_mask = self._unpack_rows(new)
+            lev2 = jnp.where(new_mask, lvl + 1, level)
+            pending = jax.lax.psum(jnp.sum(left2 >= 0, dtype=jnp.int32),
+                                   axes)
+            return (frontier | new, v2, lev2, pending,
+                    left2.reshape(leftover.shape))
+
+        sp = self._specs()
+        return jax.jit(shard_map(
+            drain, mesh=self.mesh,
+            in_specs=(sp, sp, sp, P(), sp),
+            out_specs=(sp, sp, sp, P(), sp)))
+
+    def _pull_fn(self, budget: int):
+        axes, vl = self.axes, self.vl
+
+        def pull(frontier, visited, level, lvl, in_indptr, in_indices):
+            # all-gather the packed frontier (W bits total = |V|): the pull
+            # mode's "read current_frontier of remote parents".
+            f_global = jax.lax.all_gather(frontier, axes,
+                                          tiled=True).reshape(-1)
+            umask = ~self._unpack_rows(visited)
+            unvisited = jax.vmap(lambda m: compact_indices(m, vl)[0])(umask)
+            child, parent, valid, total = jax.vmap(
+                lambda a, ip, ix: expand_edges(a, ip, ix, budget))(
+                unvisited, in_indptr, in_indices)
+            overflow = jax.lax.psum(
+                jnp.any(total > budget).astype(jnp.int32), axes)
+            hit = bitmap.test_bits(
+                f_global, jnp.maximum(parent.reshape(-1), 0)
+            ).reshape(parent.shape) & valid
+            cand = jax.vmap(
+                lambda h, c: bitmap.from_indices_dense(
+                    jnp.where(h, c, -1), vl))(hit, child)
+            new = cand & ~visited
+            v2 = visited | new
+            new_mask = self._unpack_rows(new)
+            lev2 = jnp.where(new_mask, lvl + 1, level)
+            return (new, v2, lev2, overflow,
+                    jax.lax.psum(jnp.sum(total), axes))
+
+        sp = self._specs()
+        return jax.jit(shard_map(
+            pull, mesh=self.mesh,
+            in_specs=(sp, sp, sp, P(), sp, sp),
+            out_specs=(sp, sp, sp, P(), P())))
+
+    def _get(self, kind: str, budget: int):
+        key = (kind, budget)
+        if key not in self._steps:
+            if kind == "push":
+                self._steps[key] = self._push_fn(budget)
+            elif kind == "pull":
+                self._steps[key] = self._pull_fn(budget)
+            elif kind == "stats":
+                self._steps[key] = self._stats_fn()
+            elif kind == "drain":
+                self._steps[key] = self._queue_drain_fn()
+        return self._steps[key]
+
+    # -- driver -----------------------------------------------------------
+    def run(self, root: int, max_iters: int | None = None):
+        """BFS from original-ID ``root``; returns level int32[num_vertices]."""
+        pg, cfg = self.pg, self.cfg
+        if pg.scheme == "hash":
+            root_r = (root % pg.num_shards) * pg.verts_per_shard \
+                + root // pg.num_shards
+        else:
+            root_r = root
+        frontier, visited, level = self.init_state(root_r)
+        stats = self._get("stats", 0)
+        budget = cfg.edge_budget
+        lvl = jnp.int32(0)
+        mode = jnp.int32(PUSH)
+        iters = 0
+        inspected = 0
+        push_iters = pull_iters = 0
+        max_iters = max_iters or self.n_pad
+        while iters < max_iters:
+            n_f, m_f, m_u, n_u = stats(frontier, visited, self.out_indptr,
+                                       self.in_indptr)
+            if int(n_f) == 0:
+                break
+            mode = choose_mode(cfg.scheduler, mode, n_f, m_f, m_u,
+                               pg.num_vertices, n_u)
+            is_push = int(mode) == PUSH
+            need = int(m_f) if is_push else int(m_u)
+            while budget * self.k < need:
+                budget *= 2
+            while True:
+                if is_push:
+                    out = self._get("push", budget)(
+                        frontier, visited, level, lvl,
+                        self.out_indptr, self.out_indices)
+                    frontier2, visited2, level2, overflow, total = out[:5]
+                    pending, leftover = out[5], out[6]
+                else:
+                    (frontier2, visited2, level2, overflow,
+                     total) = self._get("pull", budget)(
+                        frontier, visited, level, lvl,
+                        self.in_indptr, self.in_indices)
+                    pending = 0
+                if int(overflow) == 0:
+                    break
+                budget *= 2            # HBM-reader queue deepening, retry
+            # queue-mode FIFO overflow: extra dispatch rounds (same level).
+            while int(pending) > 0:
+                drain = self._get("drain", 0)
+                frontier2, visited2, level2, pending, leftover = drain(
+                    frontier2, visited2, level2, lvl, leftover)
+            frontier, visited, level = frontier2, visited2, level2
+            inspected += int(total)
+            if is_push:
+                push_iters += 1
+            else:
+                pull_iters += 1
+            lvl = lvl + 1
+            iters += 1
+        # un-reindex levels back to original vertex order
+        lev = np.asarray(level).reshape(-1)           # [q*vl] reindexed
+        g = np.arange(self.n_pad)
+        orig = (unreindex(g, self.q, self.vl) if pg.scheme == "hash" else g)
+        out = np.full(pg.num_vertices, int(INF), np.int64)
+        ok = orig < pg.num_vertices
+        out[orig[ok]] = lev[ok]
+        self.last_stats = dict(iterations=iters, edges_inspected=inspected,
+                               push_iters=push_iters, pull_iters=pull_iters)
+        return out
+
+
+def _flat_axis_index(axes: tuple[str, ...]) -> jax.Array:
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx

@@ -1,0 +1,287 @@
+"""Single-device BFS engine implementing the paper's Algorithm 2.
+
+Three bitmaps (current frontier / next frontier / visited) + a level array.
+Two execution paths:
+
+* ``bfs_reference`` — fully-jit `lax.while_loop`, edge-parallel (dense) steps.
+  This is the correctness oracle-adjacent path used by tests and by the
+  distributed engine's per-shard step.
+* ``BFSRunner`` — work-efficient gather path mirroring the hardware pipeline
+  P1 (workload prep: frontier compaction), P2 (neighbor checking: CSR/CSC
+  gather + bitmap tests), P3 (result writing: fused bitmap update).  It
+  counts *inspected edges* per mode, which is what the paper's Fig. 8/10
+  comparisons measure, and drives GTEPS benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmap
+from repro.core.scheduler import PULL, PUSH, SchedulerConfig, choose_mode
+from repro.graph.csr import CSRGraph, edge_sources
+
+INF = jnp.int32(2 ** 30)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("out_indptr", "out_indices", "in_indptr", "in_indices",
+                      "out_src", "in_child"),
+         meta_fields=("n", "n_pad"))
+@dataclasses.dataclass(frozen=True)
+class LocalGraph:
+    """Device-resident graph arrays (vertex space padded to words).
+
+    All index arrays are int32 (graphs up to 2**31 edges; enable
+    jax_enable_x64 for larger — host-side construction is already int64).
+    """
+
+    n: int
+    n_pad: int
+    out_indptr: jax.Array   # int32[n_pad+1]
+    out_indices: jax.Array  # int32[E]
+    in_indptr: jax.Array
+    in_indices: jax.Array
+    out_src: jax.Array      # int32[E] edge-parallel CSR sources
+    in_child: jax.Array     # int32[E] edge-parallel CSC rows (children)
+
+    @property
+    def out_deg(self):
+        return jnp.diff(self.out_indptr).astype(jnp.int32)
+
+    @property
+    def in_deg(self):
+        return jnp.diff(self.in_indptr).astype(jnp.int32)
+
+
+def build_local_graph(csr: CSRGraph, csc: CSRGraph) -> LocalGraph:
+    n = csr.num_vertices
+    n_pad = bitmap.num_words(n) * bitmap.WORD_BITS
+
+    def pad_ptr(indptr):
+        return np.concatenate(
+            [indptr, np.full(n_pad - n, indptr[-1], dtype=indptr.dtype)])
+
+    return LocalGraph(
+        n=n, n_pad=n_pad,
+        out_indptr=jnp.asarray(pad_ptr(csr.indptr).astype(np.int32)),
+        out_indices=jnp.asarray(csr.indices),
+        in_indptr=jnp.asarray(pad_ptr(csc.indptr).astype(np.int32)),
+        in_indices=jnp.asarray(csc.indices),
+        out_src=jnp.asarray(edge_sources(csr)),
+        in_child=jnp.asarray(edge_sources(csc)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dense (edge-parallel) steps: O(E) work, trivially correct, fully jit.
+# ---------------------------------------------------------------------------
+
+def _dense_step(g: LocalGraph, frontier_w, visited_w):
+    """One level expansion; returns candidate bitmap words (global)."""
+    fmask = bitmap.unpack(frontier_w, g.n_pad)
+    msg = fmask[g.out_src]                       # active source per CSR edge
+    cand = jnp.zeros((g.n_pad,), jnp.bool_).at[g.out_indices].max(msg)
+    return bitmap.pack(cand)
+
+
+def bfs_reference(g: LocalGraph, root: int, max_iters: int | None = None):
+    """Fully-jit Algorithm 2 loop (dense steps).  Returns level int32[n]."""
+    nw = bitmap.num_words(g.n_pad)
+    max_iters = max_iters or g.n_pad
+
+    def cond(state):
+        frontier, visited, level, lvl = state
+        return (bitmap.popcount(frontier) > 0) & (lvl < max_iters)
+
+    def body(state):
+        frontier, visited, level, lvl = state
+        cand = _dense_step(g, frontier, visited)
+        new = cand & ~visited                     # P3: next |= cand & ~visited
+        visited = visited | new
+        new_mask = bitmap.unpack(new, g.n_pad)
+        level = jnp.where(new_mask, lvl + 1, level)
+        return new, visited, level, lvl + 1
+
+    frontier0 = bitmap.from_indices_dense(jnp.array([root]), g.n_pad)
+    visited0 = frontier0
+    level0 = jnp.full((g.n_pad,), INF, jnp.int32).at[root].set(0)
+    frontier, visited, level, lvl = jax.lax.while_loop(
+        cond, body, (frontier0, visited0, level0, jnp.int32(0)))
+    return level[: g.n]
+
+
+# ---------------------------------------------------------------------------
+# Work-efficient gather pipeline (P1 -> P2 -> P3), mirroring the PE stages.
+# ---------------------------------------------------------------------------
+
+def compact_indices(mask: jax.Array, cap: int) -> tuple[jax.Array, jax.Array]:
+    """P1 workload prep: indices of set bits, padded with -1 to ``cap``."""
+    idx = jnp.nonzero(mask, size=cap, fill_value=-1)[0]
+    return idx.astype(jnp.int32), jnp.sum(mask, dtype=jnp.int32)
+
+
+def expand_edges(active: jax.Array, indptr: jax.Array, indices: jax.Array,
+                 budget: int):
+    """P2 neighbor gather: flatten the neighbor lists of ``active`` vertices.
+
+    Returns (sources, neighbors, valid, total_edges).  ``total_edges`` may
+    exceed ``budget`` — the caller must treat that as overflow and retry with
+    a bigger budget (the HBM-reader queue depth analogue).
+    """
+    a = jnp.maximum(active, 0)
+    deg = (indptr[a + 1] - indptr[a]) * (active >= 0)
+    cum = jnp.cumsum(deg)
+    total = cum[-1]
+    e = jnp.arange(budget, dtype=jnp.int32)
+    owner = jnp.searchsorted(cum, e, side="right").astype(jnp.int32)
+    owner_c = jnp.minimum(owner, active.shape[0] - 1)
+    start = cum[owner_c] - deg[owner_c]
+    src = active[owner_c]
+    eidx = indptr[jnp.maximum(src, 0)] + (e - start)
+    valid = e < total
+    nbr = indices[jnp.where(valid, eidx, 0)]
+    return (jnp.where(valid, src, -1),
+            jnp.where(valid, nbr, -1).astype(jnp.int32), valid, total)
+
+
+def _p3_update(cand_w, visited_w, use_pallas: bool):
+    """P3 result writing: fused Pallas kernel or plain jnp (same semantics)."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        new, vis2, _ = kops.fused_frontier_update(cand_w, visited_w)
+        return new, vis2
+    new = cand_w & ~visited_w
+    return new, visited_w | new
+
+
+@partial(jax.jit, static_argnames=("budget", "use_pallas"))
+def push_step(g: LocalGraph, frontier_w, visited_w, budget: int,
+              use_pallas: bool = False):
+    """Push iteration: expand out-lists of frontier, filter by visited."""
+    fmask = bitmap.unpack(frontier_w, g.n_pad)
+    active, n_f = compact_indices(fmask, g.n_pad)
+    _, nbr, valid, total = expand_edges(active, g.out_indptr, g.out_indices,
+                                        budget)
+    unvisited = ~bitmap.test_bits(visited_w, jnp.maximum(nbr, 0)) & valid
+    cand = bitmap.from_indices_dense(jnp.where(unvisited, nbr, -1), g.n_pad)
+    new, vis2 = _p3_update(cand, visited_w, use_pallas)
+    return new, vis2, total, total > budget
+
+
+@partial(jax.jit, static_argnames=("budget", "use_pallas"))
+def pull_step(g: LocalGraph, frontier_w, visited_w, budget: int,
+              use_pallas: bool = False):
+    """Pull iteration: expand in-lists of unvisited, test frontier bit."""
+    umask = ~bitmap.unpack(visited_w, g.n_pad)
+    unvisited, _ = compact_indices(umask, g.n_pad)
+    child, parent, valid, total = expand_edges(
+        unvisited, g.in_indptr, g.in_indices, budget)
+    hit = bitmap.test_bits(frontier_w, jnp.maximum(parent, 0)) & valid
+    cand = bitmap.from_indices_dense(jnp.where(hit, child, -1), g.n_pad)
+    new, vis2 = _p3_update(cand, visited_w, use_pallas)
+    return new, vis2, total, total > budget
+
+
+@jax.jit
+def _iter_stats(g: LocalGraph, frontier_w, visited_w):
+    fmask = bitmap.unpack(frontier_w, g.n_pad)
+    umask = ~bitmap.unpack(visited_w, g.n_pad)
+    n_f = jnp.sum(fmask, dtype=jnp.int32)
+    m_f = jnp.sum(jnp.where(fmask, g.out_deg, 0), dtype=jnp.int32)
+    m_u = jnp.sum(jnp.where(umask, g.in_deg, 0), dtype=jnp.int32)
+    n_u = jnp.sum(umask, dtype=jnp.int32)
+    return n_f, m_f, m_u, n_u
+
+
+@dataclasses.dataclass
+class BFSResult:
+    level: np.ndarray
+    iterations: int
+    edges_inspected: int
+    push_iters: int
+    pull_iters: int
+    traversed_edges: int
+    seconds: float
+
+    @property
+    def gteps(self) -> float:
+        return self.traversed_edges / max(self.seconds, 1e-12) / 1e9
+
+
+class BFSRunner:
+    """Python-driven hybrid BFS with budgeted gather steps (bench engine)."""
+
+    def __init__(self, g: LocalGraph, sched: SchedulerConfig | None = None,
+                 init_budget: int = 1 << 15, use_pallas: bool = False):
+        self.g = g
+        self.sched = sched or SchedulerConfig()
+        self.init_budget = init_budget
+        self.use_pallas = use_pallas
+
+    def run(self, root: int, time_it: bool = False) -> BFSResult:
+        g = self.g
+        frontier = bitmap.from_indices_dense(jnp.array([root]), g.n_pad)
+        visited = frontier
+        level = jnp.full((g.n_pad,), INF, jnp.int32).at[root].set(0)
+        mode = jnp.int32(PUSH)
+        lvl = 0
+        inspected = 0
+        push_iters = pull_iters = 0
+        budget = self.init_budget
+        t0 = time.perf_counter()
+        while True:
+            n_f, m_f, m_u, n_u = _iter_stats(g, frontier, visited)
+            if int(n_f) == 0:
+                break
+            mode = choose_mode(self.sched, mode, n_f, m_f, m_u, g.n, n_u)
+            step = push_step if int(mode) == PUSH else pull_step
+            need = int(m_f) if int(mode) == PUSH else int(m_u)
+            while budget < min(need, g.out_indices.shape[0] + 1):
+                budget *= 2
+            new, visited, total, overflow = step(g, frontier, visited, budget,
+                                                 self.use_pallas)
+            while bool(overflow):   # HBM-reader queue overflow: deepen, retry
+                budget *= 2
+                new, visited, total, overflow = step(g, frontier, visited,
+                                                     budget, self.use_pallas)
+            new_mask = bitmap.unpack(new, g.n_pad)
+            level = jnp.where(new_mask, lvl + 1, level)
+            frontier = new
+            lvl += 1
+            inspected += int(total)
+            if int(mode) == PUSH:
+                push_iters += 1
+            else:
+                pull_iters += 1
+        level.block_until_ready()
+        dt = time.perf_counter() - t0
+        level_np = np.asarray(level[: g.n])
+        # GTEPS metric per paper §VI-A: sum of outgoing neighbor-list lengths
+        # of all visited vertices; each edge counted once.
+        out_deg = np.asarray(jnp.diff(g.out_indptr))[: g.n]
+        traversed = int(out_deg[level_np < int(INF)].sum())
+        return BFSResult(level=level_np, iterations=lvl,
+                         edges_inspected=inspected, push_iters=push_iters,
+                         pull_iters=pull_iters, traversed_edges=traversed,
+                         seconds=dt)
+
+
+def bfs_oracle(csr: CSRGraph, root: int) -> np.ndarray:
+    """Pure-python BFS (Algorithm 1) — the correctness oracle."""
+    from collections import deque
+    level = np.full(csr.num_vertices, int(INF), dtype=np.int64)
+    level[root] = 0
+    q = deque([root])
+    while q:
+        v = q.popleft()
+        for u in csr.neighbors(v):
+            if level[u] == int(INF):
+                level[u] = level[v] + 1
+                q.append(int(u))
+    return level

@@ -1,0 +1,92 @@
+"""Packed-bitmap frontier state (paper Algorithm 2).
+
+ScalaBFS tracks vertex status with three bitmaps — ``current_frontier``,
+``next_frontier``, ``visited`` — one bit per vertex, held in double-pump
+BRAM on the FPGA.  The TPU analogue is a packed ``uint32`` word array that
+lives in VMEM inside kernels and in device HBM between iterations.
+
+All functions are pure-jnp and jit-safe; the Pallas kernel in
+``repro.kernels.bitmap_update`` implements the fused P3 update against the
+same semantics (``repro.kernels.ref`` ties them together).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+
+
+def num_words(num_bits: int) -> int:
+    return (num_bits + WORD_BITS - 1) // WORD_BITS
+
+
+def zeros(num_bits: int) -> jax.Array:
+    return jnp.zeros((num_words(num_bits),), dtype=jnp.uint32)
+
+
+def from_indices(idx: jax.Array, num_bits: int) -> jax.Array:
+    """Bitmap with bits ``idx`` set.  Out-of-range indices are ignored."""
+    idx = jnp.asarray(idx)
+    valid = (idx >= 0) & (idx < num_bits)
+    word = jnp.where(valid, idx // WORD_BITS, num_words(num_bits))
+    bit = (jnp.uint32(1) << (idx % WORD_BITS).astype(jnp.uint32))
+    bit = jnp.where(valid, bit, 0).astype(jnp.uint32)
+    out = jnp.zeros((num_words(num_bits) + 1,), dtype=jnp.uint32)
+    out = _scatter_or(out, word, bit)
+    return out[:-1]
+
+
+def _scatter_or(words: jax.Array, word_idx: jax.Array, bits: jax.Array) -> jax.Array:
+    """Scatter bitwise-OR: words[word_idx] |= bits (duplicates allowed)."""
+    # Decompose into the 32 bit-planes: for plane b, set word w if any
+    # scattered element targets (w, b).  at[].max on uint32 of a single bit
+    # value is an OR for that bit, but two different bits in the same word
+    # would take max instead of OR.  Per-plane scatter-max is exact.
+    out = words
+    for b in range(WORD_BITS):
+        plane = bits & jnp.uint32(1 << b)
+        out = out.at[word_idx].max(plane)  # max == OR for single-bit planes
+    return out
+
+
+def from_indices_dense(idx: jax.Array, num_bits: int) -> jax.Array:
+    """Bitmap from indices via a dense boolean intermediate (fast path)."""
+    dense = jnp.zeros((num_words(num_bits) * WORD_BITS,), dtype=jnp.bool_)
+    valid = (idx >= 0) & (idx < num_bits)
+    dense = dense.at[jnp.where(valid, idx, num_bits)].max(valid,
+                                                          mode="drop")
+    return pack(dense)
+
+
+def pack(mask: jax.Array) -> jax.Array:
+    """bool[num_bits] -> uint32[num_words] (little-endian bit order)."""
+    nb = mask.shape[0]
+    pad = (-nb) % WORD_BITS
+    m = jnp.pad(mask, (0, pad)).reshape(-1, WORD_BITS).astype(jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(m << shifts, axis=1, dtype=jnp.uint32)
+
+
+def unpack(words: jax.Array, num_bits: int | None = None) -> jax.Array:
+    """uint32[num_words] -> bool[num_bits]."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts[None, :]) & jnp.uint32(1)
+    flat = bits.reshape(-1).astype(jnp.bool_)
+    return flat if num_bits is None else flat[:num_bits]
+
+
+def test_bits(words: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gathered bit test: returns bool per index."""
+    w = words[idx // WORD_BITS]
+    return ((w >> (idx % WORD_BITS).astype(jnp.uint32)) & 1).astype(jnp.bool_)
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    return jnp.sum(jax.lax.population_count(words).astype(jnp.int32))
+
+
+def np_unpack(words: np.ndarray, num_bits: int) -> np.ndarray:
+    b = np.unpackbits(words.view(np.uint8), bitorder="little")
+    return b[:num_bits].astype(bool)

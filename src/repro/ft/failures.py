@@ -1,0 +1,81 @@
+"""Fault tolerance: failure injection, retry-from-checkpoint, stragglers.
+
+At 1000+ nodes, the dominant failure modes are (a) preempted/crashed hosts,
+(b) slow hosts (stragglers), (c) data corruption.  The policies here are the
+single-controller analogues, exercised by tests with injected faults:
+
+* ``run_with_retries`` — wraps a step function; on failure restores the
+  latest checkpoint and replays (the data pipeline is a pure function of
+  (seed, step), so replay is exact).
+* ``FailureInjector`` — deterministic fault schedule for tests/examples.
+* Stragglers: level-synchronous BFS and synchronous data-parallel training
+  both barrier per step, so mitigation = balanced partitioning (the paper's
+  hash interval scheme) + bounded per-step work (edge budgets / fixed batch
+  shapes).  ``StepTimer`` flags outlier steps so a deployment can evict
+  slow hosts (documented policy; eviction needs a cluster manager).
+"""
+from __future__ import annotations
+
+import time
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+class FailureInjector:
+    """Raises InjectedFailure at the scheduled step numbers (once each)."""
+
+    def __init__(self, fail_at: tuple[int, ...] = ()):
+        self.fail_at = set(fail_at)
+
+    def check(self, step: int):
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            raise InjectedFailure(f"injected failure at step {step}")
+
+
+class StepTimer:
+    """Tracks step durations; flags stragglers above k× the running median."""
+
+    def __init__(self, k: float = 3.0, window: int = 50):
+        self.k = k
+        self.window = window
+        self.durations: list[float] = []
+        self.flags: list[int] = []
+
+    def record(self, step: int, seconds: float):
+        self.durations.append(seconds)
+        hist = sorted(self.durations[-self.window:])
+        med = hist[len(hist) // 2]
+        if len(hist) >= 5 and seconds > self.k * med:
+            self.flags.append(step)
+            return True
+        return False
+
+
+def run_with_retries(step_fn, restore_fn, num_steps: int, start_step: int = 0,
+                     max_retries: int = 3, injector: FailureInjector | None = None,
+                     timer: StepTimer | None = None):
+    """Drive ``step_fn(step) -> state`` with restore-and-replay on failure.
+
+    restore_fn() -> step to resume from (reloads state inside).
+    Returns (completed_steps, num_restarts).
+    """
+    step = start_step
+    restarts = 0
+    while step < num_steps:
+        try:
+            t0 = time.perf_counter()
+            if injector is not None:
+                injector.check(step)
+            step_fn(step)
+            if timer is not None:
+                timer.record(step, time.perf_counter() - t0)
+            step += 1
+        except (InjectedFailure, RuntimeError):
+            restarts += 1
+            if restarts > max_retries:
+                raise
+            step = restore_fn()
+    return step, restarts

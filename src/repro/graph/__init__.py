@@ -1,0 +1,8 @@
+from repro.graph.csr import CSRGraph, csr_from_edges, transpose_csr, symmetrize_edges
+from repro.graph.generators import rmat_edges, uniform_edges
+from repro.graph.datasets import get_dataset, DATASETS
+
+__all__ = [
+    "CSRGraph", "csr_from_edges", "transpose_csr", "symmetrize_edges",
+    "rmat_edges", "uniform_edges", "get_dataset", "DATASETS",
+]

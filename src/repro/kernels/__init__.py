@@ -1,0 +1,6 @@
+from repro.kernels.bitmap_update import bitmap_update
+from repro.kernels.csr_gather import gather_pages
+from repro.kernels.pull_spmv import pull_spmv_blocks
+from repro.kernels import ops, ref
+
+__all__ = ["bitmap_update", "gather_pages", "pull_spmv_blocks", "ops", "ref"]

@@ -1,0 +1,86 @@
+"""Jit'd wrappers that connect the Pallas kernels to the BFS engine.
+
+``interpret=True`` everywhere in this container (CPU); on a real TPU the
+same calls run compiled (set REPRO_PALLAS_INTERPRET=0).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bitmap_update import bitmap_update
+from repro.kernels.csr_gather import gather_pages
+from repro.kernels.pull_spmv import pull_spmv_blocks
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+
+def fused_frontier_update(cand_words: jax.Array, visited_words: jax.Array):
+    """P3 update on flat uint32[w] words; returns (new, visited, count)."""
+    w = cand_words.shape[0]
+    rows = max(w // 128, 1)
+    pad = rows * 128 - w if rows * 128 >= w else (rows + 1) * 128 - w
+    if rows * 128 < w:
+        rows += 1
+    c2 = jnp.pad(cand_words, (0, pad)).reshape(rows, 128)
+    v2 = jnp.pad(visited_words, (0, pad)).reshape(rows, 128)
+    block_rows = _largest_divisor(rows, 16)
+    nf, vo, cnt = bitmap_update(c2, v2, block_rows=block_rows,
+                                interpret=INTERPRET)
+    return (nf.reshape(-1)[:w], vo.reshape(-1)[:w], cnt[0, 0])
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def build_page_table(starts: np.ndarray, degrees: np.ndarray, page: int,
+                     budget_pages: int):
+    """Host-side helper: (start, degree) pairs -> page table + masks.
+
+    Returns (page_ids int32[budget_pages], item_vertex int32[budget_pages],
+    first_offset int32[budget_pages]) where page_ids[i] is the page to fetch
+    for work item i and first_offset marks the in-page start of the list.
+    """
+    page_ids, owner, offs = [], [], []
+    for v, (s, d) in enumerate(zip(starts, degrees)):
+        if d <= 0:
+            continue
+        p0, p1 = s // page, (s + d - 1) // page
+        for p in range(p0, p1 + 1):
+            page_ids.append(p)
+            owner.append(v)
+            offs.append(s - p * page if p == p0 else 0)
+    k = len(page_ids)
+    if k > budget_pages:
+        raise OverflowError(f"page table {k} > budget {budget_pages}")
+    pad = budget_pages - k
+    return (np.asarray(page_ids + [0] * pad, np.int32),
+            np.asarray(owner + [-1] * pad, np.int32),
+            np.asarray(offs + [0] * pad, np.int32))
+
+
+def read_neighbor_pages(edges: jax.Array, page_ids: jax.Array, page: int):
+    """HBM-reader op: fetch the pages listed in ``page_ids``.
+
+    edges is the flat int32 edge array (padded to a page multiple).
+    """
+    paged = edges.reshape(-1, page)
+    return gather_pages(paged, page_ids, interpret=INTERPRET)
+
+
+def pull_spmv(blocks, block_row, block_col, frontier, num_row_blocks: int):
+    """Boolean block SpMV; returns packed OR result as bool[rb, B, L]."""
+    row_first = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32),
+         (block_row[1:] != block_row[:-1]).astype(jnp.int32)])
+    acc = pull_spmv_blocks(blocks, block_row, block_col, row_first, frontier,
+                           num_row_blocks=num_row_blocks,
+                           interpret=INTERPRET)
+    return acc > 0

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bitmap_update_ref(cand: jax.Array, visited: jax.Array):
+    """Oracle for kernels.bitmap_update.bitmap_update."""
+    nf = cand & ~visited
+    vout = visited | nf
+    cnt = jnp.sum(jax.lax.population_count(nf).astype(jnp.int32)).reshape(1, 1)
+    return nf, vout, cnt
+
+
+def gather_pages_ref(edges_paged: jax.Array, page_ids: jax.Array):
+    """Oracle for kernels.csr_gather.gather_pages."""
+    return edges_paged[page_ids]
+
+
+def pull_spmv_blocks_ref(blocks: jax.Array, block_row: jax.Array,
+                         block_col: jax.Array, row_first: jax.Array,
+                         frontier: jax.Array, num_row_blocks: int):
+    """Oracle for kernels.pull_spmv.pull_spmv_blocks."""
+    del row_first
+    nb, b, _ = blocks.shape
+    lanes = frontier.shape[-1]
+    out = jnp.zeros((num_row_blocks, b, lanes), jnp.float32)
+    prod = jnp.einsum("nij,njl->nil", blocks.astype(jnp.float32),
+                      frontier[block_col].astype(jnp.float32))
+    return out.at[block_row].add(prod)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Oracle for kernels.flash_attention: plain softmax attention.
+
+    q/k/v: [BH, S, hd] -> [BH, S, hd]."""
+    import numpy as np
+    scale = 1.0 / float(np.sqrt(q.shape[-1]))
+    s_ = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    if causal:
+        n = q.shape[1]
+        mask = jnp.tril(jnp.ones((n, k.shape[1]), bool))
+        s_ = jnp.where(mask[None], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,299 @@
+"""HLO text analyzer: loop-aware FLOP / byte / collective accounting.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+under-reports any scanned program (layer stacks, SSD chunking, flash
+attention).  This module parses the optimized HLO text instead:
+
+  * per computation: a symbol table (op name -> result shape) is built
+    first, because optimized HLO prints operands as bare names;
+  * FLOPs from dot/convolution result + contraction shapes,
+  * HBM bytes from top-level op operand/result sizes (fusion = its inputs
+    + outputs; the fused body's interior ops are register traffic),
+  * collective bytes from all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute operand sizes, broken out per op kind,
+  * call graph: while-loop bodies are multiplied by their trip count
+    (``known_trip_count`` from backend_config), fusion bodies contribute
+    FLOPs (dots inside fusions are real) but not bytes,
+  * shapes in SPMD-partitioned modules are per-device shard shapes, so all
+    results are per-device quantities.
+
+Validated against hand-counted references in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "s4": 1,
+    "u4": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}/ ]+?)\s+"
+    r"([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{"n":\s*"(\d+)"')
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+
+
+def _header_name(line: str) -> str | None:
+    """Computation headers start at column 0 and end with '{'.  (A regex on
+    the parameter list breaks on tuple-typed params' nested parens.)"""
+    if not line or line[0].isspace() or not line.rstrip().endswith("{"):
+        return None
+    if "(" not in line or line.startswith("HloModule"):
+        return None
+    m = _COMP_NAME_RE.match(line)
+    return m.group(1) if m else None
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = {
+    "all-gather", "all-gather-start", "all-reduce", "all-reduce-start",
+    "reduce-scatter", "all-to-all", "collective-permute",
+    "collective-permute-start", "ragged-all-to-all",
+}
+
+# Ops whose operand+result sizes we count as HBM traffic.  Restricted to
+# fusion boundaries: a TPU backend fuses elementwise / broadcast / reshape
+# chains into their consumers, but the CPU HLO we compile leaves many of
+# them standalone - counting those would overstate HBM bytes severalfold.
+_MEM_OPS = COLLECTIVES | {
+    "fusion", "dot", "convolution", "copy", "dynamic-update-slice",
+    "gather", "scatter", "sort", "rng-bit-generator", "custom-call",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_count: int = 0
+    # per-collective-op byte totals, e.g. {"all-gather": 1.2e9}
+    coll_by: dict = dataclasses.field(default_factory=dict)
+    # (callee, multiplier, kind) edges
+    calls: list = dataclasses.field(default_factory=list)
+    # name -> result type string (symbol table)
+    syms: dict = dataclasses.field(default_factory=dict)
+
+
+def _operand_str(line: str, opname: str) -> str:
+    """The text inside op's first parenthesized operand list."""
+    m = re.search(re.escape(opname) + r"\(", line)
+    if not m:
+        return ""
+    start = m.end()
+    depth = 1
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start:i]
+    return line[start:]
+
+
+def _operand_bytes(args: str, syms: dict) -> int:
+    """Sum operand sizes: inline shapes if printed, else symbol lookup."""
+    inline = _shape_bytes(args)
+    if inline:
+        return inline
+    total = 0
+    for name in _NAME_RE.findall(args):
+        t = syms.get(name)
+        if t:
+            total += _shape_bytes(t)
+    return total
+
+
+def _dot_flops(line: str, type_str: str, syms: dict) -> float:
+    """2 * prod(result_dims) * contraction_size for a dot/convolution."""
+    out_dims = _first_dims(type_str) or [1]
+    out_elems = math.prod(out_dims)
+    args = _operand_str(line, "convolution" if "convolution(" in line
+                        else "dot")
+    # operand shapes: inline if printed, else from the symbol table
+    shapes = _SHAPE_RE.findall(args)
+    op_dims = [[int(d) for d in dims.split(",") if d] for _, dims in shapes]
+    if not op_dims:
+        names = _NAME_RE.findall(args)
+        op_dims = [_first_dims(syms.get(n, "")) for n in names]
+    if "convolution(" in line:
+        if len(op_dims) >= 2 and op_dims[1]:
+            rhs = op_dims[1]
+            k = math.prod(rhs) // max(rhs[-1], 1)
+            return 2.0 * out_elems * k
+        return 2.0 * out_elems
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    if not cm or not op_dims or not op_dims[0]:
+        return 2.0 * out_elems
+    lhs_dims = op_dims[0]
+    contract = 1
+    for ci in cm.group(1).split(","):
+        if ci and int(ci) < len(lhs_dims):
+            contract *= lhs_dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+def parse_hlo(text: str) -> dict[str, CompStats]:
+    lines = text.splitlines()
+    # pass 1: each computation's ROOT op (to spot fused in-place updates)
+    roots: dict[str, str] = {}
+    cur_name = None
+    for line in lines:
+        name = _header_name(line)
+        if name is not None:
+            cur_name = name
+            continue
+        if cur_name and line.lstrip().startswith("ROOT "):
+            m = _OP_RE.match(line)
+            if m:
+                roots[cur_name] = m.group(3)
+
+    comps: dict[str, CompStats] = {}
+    cur: CompStats | None = None
+    entry: str | None = None
+    for line in lines:
+        name = _header_name(line)
+        if name is not None:
+            cur = comps.setdefault(name, CompStats())
+            if line.startswith("ENTRY"):
+                entry = name
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        res_name, type_str, opname = m.groups()
+        cur.syms[res_name] = type_str
+        fusion_root = ""
+        if opname == "fusion":
+            cm0 = re.search(r"calls=%?([\w.\-]+)", line)
+            if cm0:
+                fusion_root = roots.get(cm0.group(1), "")
+        if opname in ("dot", "convolution"):
+            cur.flops += _dot_flops(line, type_str, cur.syms)
+        if opname in COLLECTIVES:
+            # operand bytes (per-device shard shapes in SPMD modules)
+            args = _operand_str(line, opname)
+            b = _operand_bytes(args, cur.syms)
+            cur.coll_bytes += b
+            cur.coll_count += 1
+            key = opname.removesuffix("-start")
+            cur.coll_by[key] = cur.coll_by.get(key, 0.0) + b
+        if opname in _MEM_OPS:
+            args = _operand_str(line, opname)
+            in_b = _operand_bytes(args, cur.syms)
+            out_b = _shape_bytes(type_str)
+            if (opname == "dynamic-update-slice"
+                    or (opname == "fusion"
+                        and ("dynamic-update-slice" in res_name
+                             or fusion_root == "dynamic-update-slice"))):
+                # in-place slice update: with buffer aliasing only the
+                # updated region moves, not the full carried buffer
+                ops_b = [_shape_bytes(cur.syms.get(n, ""))
+                         for n in _NAME_RE.findall(args)]
+                big = max(ops_b, default=0)
+                cur.bytes += max(in_b - big, 0) + max(out_b - big, 0)
+            else:
+                cur.bytes += in_b + out_b
+        if opname == "while":
+            mult = 1
+            tm = _TRIP_RE.search(line)
+            if tm:
+                mult = int(tm.group(1))
+            bm = re.search(r"body=%?([\w.\-]+)", line)
+            if bm:
+                cur.calls.append((bm.group(1), mult, "while"))
+            cm_ = re.search(r"condition=%?([\w.\-]+)", line)
+            if cm_:
+                cur.calls.append((cm_.group(1), mult + 1, "cond"))
+        elif opname in ("fusion", "call", "custom-call", "reduce", "scatter",
+                        "map", "sort", "select-and-scatter", "conditional"):
+            for cm2 in re.finditer(
+                    r"(?:calls|to_apply|called_computations=\{)=?%?"
+                    r"([\w.\-]+)", line):
+                cur.calls.append((cm2.group(1), 1, opname))
+    comps["__entry__"] = comps.get(entry, CompStats()) if entry else CompStats()
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+def aggregate(comps: dict, root: str | None = None,
+              _memo: dict | None = None) -> CompStats:
+    """Recursive totals from the entry computation, loop-aware.
+
+    Fusion-kind edges contribute FLOPs/collectives only (the fused body's
+    interior loads/stores are not HBM traffic); while/call edges contribute
+    everything x trip count.
+    """
+    if root is None:
+        root = comps.get("__entry_name__")
+    memo = _memo if _memo is not None else {}
+
+    def rec(name: str) -> tuple[float, float, float, int, dict]:
+        if name in memo:
+            return memo[name]
+        st = comps.get(name)
+        if st is None or not isinstance(st, CompStats):
+            return (0.0, 0.0, 0.0, 0, {})
+        memo[name] = (0.0, 0.0, 0.0, 0, {})  # cycle guard
+        f, b, c, n = st.flops, st.bytes, st.coll_bytes, st.coll_count
+        by = dict(st.coll_by)
+        for callee, mult, kind in st.calls:
+            if callee is None:
+                continue
+            cf, cb, cc, cn, cby = rec(callee)
+            f += mult * cf
+            c += mult * cc
+            n += mult * cn
+            if kind not in ("fusion", "reduce", "scatter", "map", "sort",
+                            "select-and-scatter"):
+                b += mult * cb
+            for k, v in cby.items():
+                by[k] = by.get(k, 0.0) + mult * v
+        memo[name] = (f, b, c, n, by)
+        return memo[name]
+
+    f, b, c, n, by = rec(root) if root else (0.0, 0.0, 0.0, 0, {})
+    out = CompStats(flops=f, bytes=b, coll_bytes=c, coll_by=by)
+    out.coll_count = n
+    return out
+
+
+def analyze_hlo_text(text: str) -> dict:
+    comps = parse_hlo(text)
+    total = aggregate(comps)
+    return {
+        "flops": total.flops,
+        "bytes": total.bytes,
+        "collective_bytes": total.coll_bytes,
+        "collective_count": total.coll_count,
+        "collective_by_op": total.coll_by,
+    }

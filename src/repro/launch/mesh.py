@@ -1,0 +1,34 @@
+"""Production meshes.  Functions, not module constants, so importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def _make(shape, axes):
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _make(shape, axes)
+
+
+def make_test_mesh(num_devices: int | None = None):
+    """Small local mesh over however many (host) devices exist."""
+    n = num_devices or len(jax.devices())
+    if n == 1:
+        return _make((1, 1, 1), ("pod", "data", "model"))
+    # factor n into (pod, data, model) greedily
+    pod = 2 if n % 2 == 0 and n > 4 else 1
+    rem = n // pod
+    model = 1
+    for m in (4, 2):
+        if rem % m == 0:
+            model = m
+            break
+    data = rem // model
+    return _make((pod, data, model), ("pod", "data", "model"))

@@ -1,0 +1,84 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Target hardware is TPU v5e (this container is CPU-only, so nothing is
+timed): per chip 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s per ICI link.
+All inputs are *per-device* quantities (the HLO parser sees SPMD shard
+shapes), so the three terms
+
+    compute    = flops_per_device   / peak_flops
+    memory     = bytes_per_device   / hbm_bw
+    collective = coll_bytes_per_dev / ici_bw
+
+are per-chip seconds for one step; they equal the global-quantity form
+``HLO_FLOPs / (chips x peak)`` exactly.  The step's lower-bound time under
+perfect overlap is ``max`` of the three; the dominant term is the
+bottleneck the §Perf loop iterates on.
+
+``MODEL_FLOPS`` is the useful-math floor: 6·N·D for a train step (fwd+bwd),
+2·N·D for prefill, 2·N·B for one decode step (N = active params, D =
+tokens).  ``useful_ratio = MODEL_FLOPS / HLO_FLOPs`` exposes remat /
+redundancy waste; ``roofline_fraction = t_model / t_bound`` is the score:
+the fraction of the perfect-overlap bound spent on useful math.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_bf16: float = 197e12     # FLOP/s per chip
+    hbm_bw: float = 819e9         # B/s per chip
+    ici_bw: float = 50e9          # B/s per link (we count one link's worth)
+
+
+V5E = Hardware()
+
+
+def roofline_terms(per_device: dict, hw: Hardware = V5E) -> dict:
+    """per_device: {flops, bytes, collective_bytes} -> 3 terms (seconds)."""
+    t_comp = per_device["flops"] / hw.peak_bf16
+    t_mem = per_device["bytes"] / hw.hbm_bw
+    t_coll = per_device.get("collective_bytes", 0.0) / hw.ici_bw
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = terms[dominant]
+    return dict(terms, dominant=dominant.removesuffix("_s"),
+                bound_s=bound)
+
+
+def model_flops(kind: str, active_params: float, tokens: float) -> float:
+    """Useful-math floor for the cell.
+
+    kind: train (6·N·D: fwd 2 + bwd 4) | prefill (2·N·D) | decode (2·N·B,
+    tokens = batch since one token decodes per sequence)."""
+    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[kind]
+    return mult * active_params * tokens
+
+
+def analyze_cell(per_device: dict, kind: str, active_params: float,
+                 tokens: float, n_devices: int, hw: Hardware = V5E) -> dict:
+    """Full §Roofline record for one (arch x shape x mesh) cell."""
+    terms = roofline_terms(per_device, hw)
+    mf_total = model_flops(kind, active_params, tokens)
+    mf_dev = mf_total / n_devices
+    hlo_flops = max(per_device["flops"], 1.0)
+    t_model = mf_dev / hw.peak_bf16
+    return dict(
+        terms,
+        model_flops_total=mf_total,
+        model_flops_per_device=mf_dev,
+        hlo_flops_per_device=per_device["flops"],
+        useful_ratio=mf_dev / hlo_flops,
+        roofline_fraction=t_model / max(terms["bound_s"], 1e-30),
+    )
+
+
+def format_row(name: str, rec: dict) -> str:
+    return (f"{name:40s} comp={rec['compute_s']*1e3:9.3f}ms "
+            f"mem={rec['memory_s']*1e3:9.3f}ms "
+            f"coll={rec['collective_s']*1e3:9.3f}ms "
+            f"dom={rec['dominant']:10s} "
+            f"useful={rec['useful_ratio']:6.3f} "
+            f"roofline={rec['roofline_fraction']*100:6.2f}%")

@@ -1,0 +1,157 @@
+"""Sharding rules: parameters, optimizer state, batches, decode caches.
+
+Auto-spec assigns mesh axes to tensor dims from an ordered preference list,
+skipping any assignment that does not divide evenly (so GQA kv-heads fall
+back to head_dim TP, batch=1 falls back to sequence sharding, etc.).
+
+Posture (baseline):
+  * params: TP over `model` on the widest "parallel" dim (heads / d_ff /
+    experts / head_dim), FSDP over `data` on a remaining dim when divisible.
+  * optimizer state: same spec as its parameter (ZeRO via GSPMD).
+  * batch: global batch over (pod, data).
+  * decode KV caches: batch over (pod, data) when divisible, sequence dim
+    over `model` (distributed flash-decoding); otherwise sequence over
+    everything available.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DP_AXES = ("pod", "data")
+TP_AXIS = "model"
+
+
+def _axes_size(mesh_shape: dict, axes: tuple[str, ...]) -> int:
+    return int(np.prod([mesh_shape.get(a, 1) for a in axes]))
+
+
+def pick_spec(shape: tuple[int, ...], prefs: list[tuple[int, tuple[str, ...]]],
+              mesh_shape: dict) -> P:
+    """Assign mesh axes to dims by priority, honoring divisibility."""
+    spec: list[Any] = [None] * len(shape)
+    used: set[str] = set()
+    for dim, axes in prefs:
+        axes = tuple(a for a in axes if a in mesh_shape)
+        if not axes or any(a in used for a in axes) or dim >= len(shape):
+            continue
+        if spec[dim] is not None:
+            continue
+        if shape[dim] % _axes_size(mesh_shape, axes) != 0:
+            continue
+        spec[dim] = axes if len(axes) > 1 else axes[0]
+        used.update(axes)
+    return P(*spec)
+
+
+# preference tables keyed by parameter leaf name; dims are offsets from the
+# *end* of the shape so stacked [count, ...] segment params reuse the rules.
+_PARAM_PREFS = {
+    # attention projections [d, h|hkv, hd]: heads -> head_dim -> fsdp(d)
+    "wq": [(-2, (TP_AXIS,)), (-1, (TP_AXIS,)), (-3, ("data",))],
+    "wk": [(-2, (TP_AXIS,)), (-1, (TP_AXIS,)), (-3, ("data",))],
+    "wv": [(-2, (TP_AXIS,)), (-1, (TP_AXIS,)), (-3, ("data",))],
+    "wo": [(-3, (TP_AXIS,)), (-2, (TP_AXIS,)), (-1, ("data",))],
+    # MLP [d, f] / [f, d]
+    "w_gate": [(-1, (TP_AXIS,)), (-2, ("data",))],
+    "w_up": [(-1, (TP_AXIS,)), (-2, ("data",))],
+    "w_down": [(-2, (TP_AXIS,)), (-1, ("data",))],
+    # embedding [V, d]: vocab TP + fsdp on d
+    "embed": [(-2, (TP_AXIS,)), (-1, ("data",))],
+    # ssm / rglru projections [d, p]; per-stream mamba2 weights shard their
+    # own output dims (B/C/dt streams are small -> replicate)
+    "in_proj": [(-1, (TP_AXIS,)), (-2, ("data",))],
+    "w_z": [(-1, (TP_AXIS,)), (-2, ("data",))],
+    "w_xin": [(-1, (TP_AXIS,)), (-2, ("data",))],
+    "w_b": [(-2, ("data",))],
+    "w_c": [(-2, ("data",))],
+    "w_dt": [(-1, (TP_AXIS,))],
+    "conv_wx": [(-1, (TP_AXIS,))],
+    "conv_bx": [(-1, (TP_AXIS,))],
+    "out_proj": [(-2, (TP_AXIS,)), (-1, ("data",))],
+    "w_x": [(-1, (TP_AXIS,)), (-2, ("data",))],
+    "w_gate_branch": [(-1, (TP_AXIS,)), (-2, ("data",))],
+    "w_r": [(-1, (TP_AXIS,))],
+    "w_i": [(-1, (TP_AXIS,))],
+    "w_out": [(-2, (TP_AXIS,)), (-1, ("data",))],
+    "conv_w": [(-1, (TP_AXIS,))],
+    "conv_b": [(-1, (TP_AXIS,))],
+    "router": [],
+}
+
+_MOE_PREFS = {
+    # expert-parallel stacks [E, d, f] / [E, f, d]
+    "w_gate": [(-3, (TP_AXIS,)), (-2, ("data",))],
+    "w_up": [(-3, (TP_AXIS,)), (-2, ("data",))],
+    "w_down": [(-3, (TP_AXIS,)), (-2, ("data",))],
+}
+
+
+def param_pspec(path, leaf, mesh_shape: dict) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf_name = names[-1]
+    in_moe = "moe" in names
+    table = _MOE_PREFS if (in_moe and leaf_name in _MOE_PREFS) else _PARAM_PREFS
+    prefs = table.get(leaf_name, [])
+    nd = len(leaf.shape)
+    prefs_abs = [(nd + d if d < 0 else d, a) for d, a in prefs
+                 if -nd <= d < nd]
+    return pick_spec(leaf.shape, prefs_abs, mesh_shape)
+
+
+def param_shardings(abstract_tree, mesh: Mesh):
+    mesh_shape = dict(mesh.shape)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_pspec(path, leaf, mesh_shape)), abstract_tree)
+
+
+def batch_pspec(shape: tuple[int, ...], mesh_shape: dict) -> P:
+    """Token/label/embeds batches: batch over (pod, data)."""
+    prefs = [(0, DP_AXES), (0, ("data",))]
+    return pick_spec(shape, prefs, mesh_shape)
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    mesh_shape = dict(mesh.shape)
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_pspec(leaf.shape, mesh_shape)),
+        batch_tree)
+
+
+def cache_pspec(shape: tuple[int, ...], mesh_shape: dict,
+                seq_axis_joint: bool = False) -> P:
+    """Decode caches.
+
+    KV tensors are [count, B, L, hkv, hd]; ssm/rglru states are
+    [count, B, ...].  Batch gets (pod, data) when divisible; the longest
+    remaining dim gets `model` (KV length / state width).
+    """
+    nd = len(shape)
+    prefs: list[tuple[int, tuple[str, ...]]] = []
+    if nd >= 2:
+        prefs.append((1, DP_AXES))
+        prefs.append((1, ("data",)))
+    if nd >= 3:
+        # the sequence / width dim: prefer the largest dim after batch
+        cand = int(np.argmax(shape[2:])) + 2
+        if seq_axis_joint:
+            prefs.append((cand, (TP_AXIS, "data")))
+        prefs.append((cand, (TP_AXIS,)))
+    return pick_spec(shape, prefs, mesh_shape)
+
+
+def cache_shardings(cache_tree, mesh: Mesh, seq_axis_joint: bool = False):
+    mesh_shape = dict(mesh.shape)
+    return jax.tree.map(
+        lambda leaf: NamedSharding(
+            mesh, cache_pspec(leaf.shape, mesh_shape, seq_axis_joint)),
+        cache_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,10 @@
+from repro.models.config import ArchConfig, layer_plan_kinds, layer_segments
+from repro.models.transformer import (abstract_params, forward_train,
+                                      init_decode_state, init_params,
+                                      loss_fn, serve_step)
+
+__all__ = [
+    "ArchConfig", "layer_plan_kinds", "layer_segments", "abstract_params",
+    "forward_train", "init_decode_state", "init_params", "loss_fn",
+    "serve_step",
+]

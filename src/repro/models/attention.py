@@ -1,0 +1,228 @@
+"""GQA attention: full, sliding-window, chunked (flash-style), and decode.
+
+Sharding posture (see launch/shardings.py): activations shard batch over
+(pod, data); projections shard heads / d_ff over `model`.  Decode KV caches
+shard the *sequence* dim over `model` (distributed flash-decoding: XLA
+partial-softmax + combine), which is what makes 32k/500k-token caches fit.
+
+GQA is computed with grouped einsums (q reshaped to [B, S, hkv, groups,
+hd]) rather than `jnp.repeat` of K/V: the repeat materializes a
+groups-times-larger KV copy per layer (caught as 4x f32 copies in the
+decode dry-run).  The decode cache write is a masked `where` on the local
+iota rather than a dynamic-update-slice: a DUS indexes the *sharded*
+sequence dim dynamically, which forces XLA to all-gather the cache shard
+per layer; the mask is shard-local.  Trade-off vs. in-place DUS aliasing
+is discussed in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import psharding as psh
+from repro.models.layers import rope
+
+NEG_INF = -1e30
+
+
+def attn_params(key, d: int, h: int, hkv: int, hd: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    s = 1.0 / float(np.sqrt(d))
+    so = 1.0 / float(np.sqrt(h * hd))
+    return {
+        "wq": jax.random.normal(ks[0], (d, h, hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, hkv, hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, hkv, hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (h, hd, d), dtype) * so,
+    }
+
+
+def full_attention(q, k, v, *, causal: bool, window: int = 0,
+                   q_positions=None, k_positions=None):
+    """Masked full attention.  q: [B,Sq,H,hd]; k/v: [B,Sk,Hkv,hd]."""
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / float(np.sqrt(hd))
+    if q_positions is None:
+        q_positions = jnp.arange(sq)
+    if k_positions is None:
+        k_positions = jnp.arange(k.shape[1])
+    qp = q_positions[:, None]
+    kp = k_positions[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool) if causal is False else (kp <= qp)
+    if window:
+        mask = mask & (kp > qp - window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(b, sq, h, hd)
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                    chunk_q: int = 1024, chunk_k: int = 1024,
+                    shard_q_chunks: bool = False):
+    """Chunked online-softmax attention (pure-JAX flash) for long sequences.
+
+    Outer scan over q chunks, inner scan over kv chunks with block masking.
+    Peak temp is [B, H, chunk_q, chunk_k] instead of [B, H, S, S].
+    """
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    nq, nk = s // chunk_q, s // chunk_k
+    assert s % chunk_q == 0 and s % chunk_k == 0, (s, chunk_q, chunk_k)
+    qc = q.reshape(b, nq, chunk_q, hkv, g, hd).transpose(1, 0, 3, 4, 2, 5)
+    kc = k.reshape(b, nk, chunk_k, hkv, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nk, chunk_k, hkv, hd).transpose(1, 0, 3, 2, 4)
+    scale = 1.0 / float(np.sqrt(hd))
+
+    def q_step(_, qi_and_i):
+        qi, iq = qi_and_i                    # qi: [b, hkv, g, cq, hd]
+        q_pos = iq * chunk_q + jnp.arange(chunk_q)
+
+        def kv_step(carry, kv_and_j):
+            m, l, acc = carry
+            kj, vj, jk = kv_and_j            # kj: [b, hkv, ck, hd]
+            k_pos = jk * chunk_k + jnp.arange(chunk_k)
+            sc = jnp.einsum("bhgqd,bhkd->bhgqk", qi, kj).astype(jnp.float32)
+            sc = sc * scale
+            mask = jnp.ones((chunk_q, chunk_k), bool)
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(qi.dtype), vj
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), ()
+
+        m0 = jnp.full((b, hkv, g, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, chunk_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kc, vc, jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    if shard_q_chunks:
+        # context parallelism for misaligned-head archs: the q-chunk grid
+        # dim shards over `model` (each rank owns nq/tp chunks against the
+        # full K/V), so no sharded-contraction all-reduces appear.  vmap
+        # instead of scan makes the grid dim a real shardable dim.
+        qc = psh.constrain(qc, "q_chunks")
+        out = jax.vmap(lambda qi, iq: q_step(None, (qi, iq))[1])(
+            qc, jnp.arange(nq))
+    else:
+        _, out = jax.lax.scan(q_step, None, (qc, jnp.arange(nq)))
+    # out: [nq, b, hkv, g, chunk_q, hd] -> [b, s, h, hd]
+    return out.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h, hd)
+
+
+def attention_block(x, p, *, positions, causal=True, window=0,
+                    rope_theta=500000.0, flash_threshold=8192,
+                    kv_override=None):
+    """Projection + RoPE + attention + output projection.
+
+    kv_override: (k, v) for cross-attention (already projected+roped).
+    """
+    b, s, d = x.shape
+    h = p["wq"].shape[1]
+    # Head-sharded attention needs heads % tp == 0; otherwise XLA shards
+    # head_dim and every q.k contraction becomes a sharded-dim all-reduce
+    # of the full score tensor (measured 582 s collective at the llava
+    # prefill cell).  Misaligned archs switch to context parallelism:
+    # q rows shard over `model`, K/V replicate, attention is rank-local.
+    aligned = h % psh.tp_size() == 0
+    q_hint = (("batch", None, "heads", "head_dim") if aligned
+              else ("batch", "q_seq", None, None))
+    kv_hint = (("batch", None, "kv_heads", "head_dim") if aligned
+               else ("batch", None, None, None))
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = psh.constrain(q, *q_hint)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        k = psh.constrain(k, *kv_hint)
+        v = psh.constrain(v, *kv_hint)
+        if rope_theta:
+            q = rope(q, positions, rope_theta)
+            k = rope(k, positions, rope_theta)
+    else:
+        k, v = kv_override
+        if rope_theta:
+            q = rope(q, positions, rope_theta)
+    if s > flash_threshold and kv_override is None and k.shape[1] == s:
+        o = flash_attention(q, k, v, causal=causal, window=window,
+                            shard_q_chunks=not aligned)
+    else:
+        o = full_attention(q, k, v, causal=causal, window=window,
+                           q_positions=positions[0] if positions.ndim > 1
+                           else positions)
+    o = psh.constrain(o, *q_hint)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, hkv: int, length: int, hd: int, dtype):
+    return {
+        "k": jnp.zeros((batch, length, hkv, hd), dtype),
+        "v": jnp.zeros((batch, length, hkv, hd), dtype),
+    }
+
+
+def attention_decode(x, p, cache, pos, *, window=0, rope_theta=500000.0):
+    """One-token decode.  x: [B, 1, d]; cache k/v: [B, L, Hkv, hd].
+
+    For windowed layers the cache is a ring buffer of length `window`
+    (slot = pos % window); for global layers it is the full sequence.
+    The write is a masked `where` over the (sequence-sharded) cache so it
+    stays shard-local; the partial softmax over the sharded length is
+    XLA's flash-decode combine.  Returns (out [B,1,d], new_cache).
+    """
+    b, _, d = x.shape
+    length = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    posb = jnp.full((b, 1), pos)
+    if rope_theta:
+        q = rope(q, posb, rope_theta)
+        k_new = rope(k_new, posb, rope_theta)
+    slot = pos % length if window else jnp.minimum(pos, length - 1)
+    idx = jnp.arange(length)
+    wmask = (idx == slot)[None, :, None, None]
+    ck = jnp.where(wmask, k_new.astype(cache["k"].dtype), cache["k"])
+    cv = jnp.where(wmask, v_new.astype(cache["v"].dtype), cache["v"])
+    ck = psh.constrain(ck, "batch", "kv_seq", None, None)
+    cv = psh.constrain(cv, "batch", "kv_seq", None, None)
+    # slot validity: ring slots hold positions pos-window+1..pos; full cache
+    # slots 0..pos.
+    if window:
+        cycle = (pos // length) * length
+        slot_pos = jnp.where(idx <= slot, cycle + idx, cycle - length + idx)
+        valid = (slot_pos >= 0) & (slot_pos <= pos)
+    else:
+        valid = idx <= pos
+    h = q.shape[2]
+    hkv = ck.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, 1, hkv, g, hd_ := q.shape[-1])
+    sc = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck).astype(jnp.float32)
+    sc = sc / float(np.sqrt(hd_))
+    sc = jnp.where(valid[None, None, None, None, :], sc, NEG_INF)
+    pattn = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", pattn, cv).reshape(b, 1, h, hd_)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,247 @@
+"""Mixture-of-Experts MLP: top-k routing, two dispatch engines.
+
+* ``gather`` (default) — sort-based capacity-FIFO dispatch: (token, slot)
+  pairs are sorted by expert, ranked within their expert queue (the exact
+  mechanism of the BFS engine's queue crossbar / the paper's FIFO
+  dispatcher), and moved with gathers/scatters.  Zero matmul FLOPs spent
+  on routing.
+* ``onehot`` — the faithful GShard baseline: a dense [c, k, e, cap]
+  one-hot dispatch einsum.  At 128 experts this costs ~4.5x the *expert*
+  FLOPs and a 300+ MB intermediate per 1k-token chunk (measured in the
+  qwen3-moe dry-run; see EXPERIMENTS.md §Perf) — kept as the comparison
+  baseline.
+
+Both are chunked over tokens with `lax.scan` so intermediates stay small;
+overflowed tokens fall through the residual (standard capacity-factor
+semantics).  Expert weights are stacked [E, ...] and sharded over the
+`model` axis (expert parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import psharding as psh
+
+
+def moe_params(key, d: int, f: int, e: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / float(np.sqrt(d))
+    s_out = 1.0 / float(np.sqrt(f))
+    return {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(ks[1], (e, d, f), dtype) * s_in,
+        "w_up": jax.random.normal(ks[2], (e, d, f), dtype) * s_in,
+        "w_down": jax.random.normal(ks[3], (e, f, d), dtype) * s_out,
+    }
+
+
+def _expert_ffn(xe, p, dtype):
+    """xe: [e, cap, d] -> [e, cap, d] (stacked-expert swiglu)."""
+    g = jax.nn.silu(jnp.einsum("eod,edf->eof", xe,
+                               p["w_gate"]).astype(jnp.float32))
+    u = jnp.einsum("eod,edf->eof", xe, p["w_up"]).astype(jnp.float32)
+    ye = jnp.einsum("eof,efd->eod", (g * u).astype(dtype), p["w_down"])
+    return psh.constrain(ye, "experts", None, None)
+
+
+def _chunk_onehot(xi, probs, p, *, top_k, e, cap, chunk):
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)       # [c, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # [c, k, e]
+    # position of each (token, slot) within its expert queue
+    pos = jnp.cumsum(onehot.reshape(-1, e), axis=0).reshape(
+        chunk, top_k, e) * onehot - 1.0
+    fits = (pos >= 0) & (pos < cap)
+    disp = jax.nn.one_hot(jnp.where(fits, pos, cap).astype(jnp.int32),
+                          cap, dtype=jnp.float32) * fits[..., None]
+    # dispatch: [c,k,e,cap] x [c,d] -> [e, cap, d]
+    xe = jnp.einsum("ckeo,cd->eod", disp, xi.astype(jnp.float32))
+    xe = psh.constrain(xe.astype(xi.dtype), "experts", None, None)
+    ye = _expert_ffn(xe, p, xi.dtype)
+    comb = jnp.einsum("ckeo,ck->ckeo", disp, gate_vals.astype(jnp.float32))
+    yi = jnp.einsum("ckeo,eod->cd", comb, ye.astype(jnp.float32))
+    return yi.astype(xi.dtype)
+
+
+def _chunk_gather(xi, probs, p, *, top_k, e, cap, chunk):
+    """Sort-based FIFO dispatch (the BFS queue-crossbar mechanism)."""
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)       # [c, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    ck = chunk * top_k
+    flat_e = gate_idx.reshape(-1)                           # [c*k]
+    order = jnp.argsort(flat_e)                             # stable
+    sorted_e = flat_e[order]
+    sorted_tok = order // top_k
+    # rank within each expert's queue; searchsorted = queue head offsets
+    start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank = jnp.arange(ck, dtype=jnp.int32) - start[sorted_e].astype(jnp.int32)
+    fits = rank < cap
+    slot = jnp.where(fits, sorted_e * cap + rank, e * cap)  # drop overflow
+    # dispatch: scatter token rows into the [e*cap, d] expert buffers
+    xe = jnp.zeros((e * cap + 1, xi.shape[1]), xi.dtype)
+    xe = xe.at[slot].set(xi[sorted_tok], mode="drop")[:-1]
+    xe = psh.constrain(xe.reshape(e, cap, -1), "experts", None, None)
+    ye = _expert_ffn(xe, p, xi.dtype)
+    # combine: gather each surviving slot's output back to its token
+    contrib = ye.reshape(e * cap, -1)[jnp.minimum(slot, e * cap - 1)]
+    w = jnp.where(fits, gate_vals.reshape(-1)[order], 0.0)
+    yi = jnp.zeros_like(xi, shape=(chunk, xi.shape[1]))
+    yi = yi.at[sorted_tok].add(contrib * w[:, None].astype(contrib.dtype))
+    return yi
+
+
+def _chunk_gather_local(xi, probs, wg, wu, wd, *, top_k, e, el, r, cap,
+                        chunk):
+    """Per-rank FIFO dispatch: this rank owns experts [r*el, (r+1)*el).
+
+    Queue positions are computed over the FULL expert id space (identical
+    on every rank), so the capacity-drop set matches the single-engine
+    semantics exactly; only the local experts' slots are then materialized
+    and processed."""
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)       # [c, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    ck = chunk * top_k
+    flat_e = gate_idx.reshape(-1)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    sorted_tok = order // top_k
+    start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank = jnp.arange(ck, dtype=jnp.int32) - start[sorted_e].astype(jnp.int32)
+    local_e = sorted_e - r * el
+    mine = (local_e >= 0) & (local_e < el) & (rank < cap)
+    slot = jnp.where(mine, local_e * cap + rank, el * cap)
+    xe = jnp.zeros((el * cap + 1, xi.shape[1]), xi.dtype)
+    xe = xe.at[slot].set(xi[sorted_tok], mode="drop")[:-1]
+    xe = xe.reshape(el, cap, -1)
+    g = jax.nn.silu(jnp.einsum("eod,edf->eof", xe, wg).astype(jnp.float32))
+    u = jnp.einsum("eod,edf->eof", xe, wu).astype(jnp.float32)
+    ye = jnp.einsum("eof,efd->eod", (g * u).astype(xi.dtype), wd)
+    contrib = ye.reshape(el * cap, -1)[jnp.minimum(slot, el * cap - 1)]
+    w = jnp.where(mine, gate_vals.reshape(-1)[order], 0.0)
+    yi = jnp.zeros_like(xi, shape=(chunk, xi.shape[1]))
+    # combine in the activation dtype: the f32 [c*k, d] intermediate was
+    # ~40% of the chunk body's HBM bytes (EXPERIMENTS.md §Perf iter 3)
+    yi = yi.at[sorted_tok].add(contrib * w[:, None].astype(contrib.dtype))
+    return yi   # partial: local experts only; caller psums over the EP axis
+
+
+def _moe_forward_ep(x: jax.Array, p: dict, mesh, *, top_k: int,
+                    capacity_factor: float, chunk: int):
+    """shard_map expert parallelism — the paper's queue crossbar as an MoE
+    dispatcher.  Tokens are batch-sharded over (pod, data) and replicated
+    over `model`; each model-rank routes the (locally visible) tokens to
+    its own expert block and a single psum combines partial outputs.
+    Collective cost: one [tb, s, d] all-reduce per MoE layer."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axes = mesh.axis_names
+    ep_axis = "model"
+    dp_axes = tuple(a for a in ("pod", "data") if a in axes)
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    tp = mesh.shape[ep_axis]
+    el = e // tp
+
+    def body(xb, router, wg, wu, wd):
+        r = jax.lax.axis_index(ep_axis)
+        tb = xb.shape[0]
+        xt = xb.reshape(tb * s, d)
+        t = xt.shape[0]
+        c = min(chunk, t)
+        pad = (-t) % c
+        if pad:
+            xt = jnp.pad(xt, ((0, pad), (0, 0)))
+        nchunk = xt.shape[0] // c
+        xc = xt.reshape(nchunk, c, d)
+        cap = max(int(c * top_k / e * capacity_factor), 4)
+        logits_all = jnp.einsum("ntd,de->nte", xc.astype(jnp.float32),
+                                router)
+        probs_all = jax.nn.softmax(logits_all, axis=-1)
+
+        def one_chunk(carry, inp):
+            xi, probs = inp
+            yi = _chunk_gather_local(xi, probs, wg, wu, wd, top_k=top_k,
+                                     e=e, el=el, r=r, cap=cap, chunk=c)
+            return carry, yi
+
+        _, yc = jax.lax.scan(one_chunk, None, (xc, probs_all))
+        y = yc.reshape(-1, d)[: t].reshape(tb, s, d)
+        y = jax.lax.psum(y, ep_axis)              # combine expert partials
+        me = probs_all.mean((0, 1))
+        top1 = jax.nn.one_hot(jnp.argmax(logits_all, -1), e).mean((0, 1))
+        if dp_axes:
+            # the Switch loss is nonlinear in the partition: average the
+            # per-expert fractions globally BEFORE taking the product
+            me = jax.lax.pmean(me, dp_axes)
+            top1 = jax.lax.pmean(top1, dp_axes)
+        aux = e * jnp.sum(me * top1)
+        return y, aux
+
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    xs = P(dp, None, None)
+    es = P(ep_axis, None, None)
+    y, aux = shard_map(
+        body, mesh=mesh,
+        in_specs=(xs, P(), es, es, es),
+        out_specs=(xs, P()),
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return y, aux
+
+
+def _ep_applicable(mesh, b, e) -> bool:
+    if mesh is None or not mesh.axis_names or "model" not in mesh.axis_names:
+        return False
+    import math
+    tp = mesh.shape["model"]
+    dp = math.prod(mesh.shape[a] for a in ("pod", "data")
+                   if a in mesh.axis_names)
+    return tp > 1 and e % tp == 0 and b % dp == 0
+
+
+def moe_forward(x: jax.Array, p: dict, *, top_k: int,
+                capacity_factor: float = 1.25, chunk: int = 1024,
+                dispatch: str = "gather") -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+    if dispatch == "ep":
+        mesh = jax.sharding.get_abstract_mesh()
+        if _ep_applicable(mesh, x.shape[0], p["router"].shape[1]):
+            return _moe_forward_ep(x, p, mesh, top_k=top_k,
+                                   capacity_factor=capacity_factor,
+                                   chunk=chunk)
+        dispatch = "gather"   # single-device / misaligned fallback
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    xt = x.reshape(b * s, d)
+    t = xt.shape[0]
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    nchunk = xt.shape[0] // chunk
+    xc = xt.reshape(nchunk, chunk, d)
+    cap = max(int(chunk * top_k / e * capacity_factor), 4)
+
+    logits_all = jnp.einsum("ntd,de->nte", xc.astype(jnp.float32),
+                            p["router"])
+    probs_all = jax.nn.softmax(logits_all, axis=-1)
+    chunk_fn = _chunk_gather if dispatch == "gather" else _chunk_onehot
+
+    def one_chunk(carry, inp):
+        xi, probs = inp
+        yi = chunk_fn(xi, probs, p, top_k=top_k, e=e, cap=cap, chunk=chunk)
+        return carry, yi
+
+    _, yc = jax.lax.scan(one_chunk, None, (xc, probs_all))
+    y = yc.reshape(-1, d)[: t].reshape(b, s, d)
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    me = probs_all.mean((0, 1))
+    top1 = jax.nn.one_hot(jnp.argmax(logits_all, -1), e).mean((0, 1))
+    aux = e * jnp.sum(me * top1)
+    return y, aux

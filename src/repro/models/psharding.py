@@ -1,0 +1,84 @@
+"""Logical activation-sharding rules (MaxText-style named axes).
+
+XLA's sharding propagation is greedy: without hints it happily replicates
+the batch dim of a large intermediate (we caught it materializing global-
+batch SSD states in the mamba2 dry-run).  Model code therefore annotates
+activations with *logical* axis names; `constrain` maps them onto whatever
+mesh axes exist at trace time (ambient abstract mesh, set by the step
+builders via ``jax.set_mesh``) and skips any assignment that does not
+divide evenly.  Outside a mesh context it is a no-op, so unit tests on one
+device run the same code.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> preferred mesh axes (first-fit with divisibility)
+RULES: dict[str | None, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": ("model",),   # GQA fallback when heads % model != 0
+    "ff": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "kv_seq": ("model",),     # decode: shard the KV length (flash-decode)
+    "q_seq": ("model",),      # misaligned-head attention: shard q rows
+    "q_chunks": ("model",),   # flash: shard the q-chunk grid dim
+    "seq": (),                # sequence stays unsharded in the baseline
+    "embed": (),
+    "state": (),
+    None: (),
+}
+
+
+def spec_for(shape: tuple[int, ...], logical: tuple[str | None, ...],
+             mesh) -> P | None:
+    names = set(mesh.axis_names)
+    sizes = dict(mesh.shape)
+    entries: list = []
+    used: set[str] = set()
+    for dim in range(len(shape)):
+        name = logical[dim] if dim < len(logical) else None
+        axes = tuple(a for a in RULES.get(name, ())
+                     if a in names and a not in used)
+        size = math.prod(sizes[a] for a in axes) if axes else 1
+        if axes and shape[dim] % size == 0 and size > 1:
+            entries.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            # try a shorter prefix (e.g. batch=("pod","data") -> ("data",))
+            hit = None
+            for a in axes:
+                if shape[dim] % sizes[a] == 0 and sizes[a] > 1:
+                    hit = a
+                    break
+            entries.append(hit)
+            if hit:
+                used.add(hit)
+    if all(e is None for e in entries):
+        return None
+    return P(*entries)
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Annotate ``x``'s dims with logical axes; no-op without a mesh."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    spec = spec_for(x.shape, logical, mesh)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def tp_size() -> int:
+    """Size of the tensor-parallel ('model') axis at trace time (1 if no
+    ambient mesh)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in (mesh.axis_names or ()):
+        return 1
+    return int(mesh.shape["model"])

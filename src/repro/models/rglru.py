@@ -1,0 +1,96 @@
+"""Griffin RG-LRU recurrent block [arXiv:2402.19427] (recurrentgemma).
+
+Block = (temporal conv1d width 4) -> RG-LRU gated linear recurrence:
+
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = a^(c * r_t)   with  a = sigmoid(Lambda),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+wrapped in the Griffin recurrent-branch structure: linear in, GeLU gate
+branch, linear out.  Training uses an associative scan; decode carries
+(conv window, h) in the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import psharding as psh
+
+_C = 8.0
+
+
+def rglru_params(key, d: int, width: int, conv_width: int, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    s = 1.0 / float(np.sqrt(d))
+    sw = 1.0 / float(np.sqrt(width))
+    return {
+        "w_x": jax.random.normal(ks[0], (d, width), dtype) * s,
+        "w_gate_branch": jax.random.normal(ks[1], (d, width), dtype) * s,
+        "conv_w": jax.random.normal(ks[2], (conv_width, width), dtype) * 0.5,
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_r": jax.random.normal(ks[3], (width, width), dtype) * sw,
+        "w_i": jax.random.normal(ks[4], (width, width), dtype) * sw,
+        "lam": jnp.asarray(np.random.default_rng(2).uniform(2.0, 5.0, width),
+                           jnp.float32),
+        "w_out": jax.random.normal(ks[5], (width, d), dtype) * sw,
+    }
+
+
+def _conv(u, w, b):
+    k = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(up[:, i: i + u.shape[1], :] * w[i] for i in range(k)) + b
+
+
+def _gates(x, p):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, p["w_r"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, p["w_i"])
+                       .astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(-p["lam"])   # log(sigmoid(lam)^(c r))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * \
+        x.astype(jnp.float32)
+    return a, gated
+
+
+def rglru_forward(x_in: jax.Array, p: dict) -> jax.Array:
+    """x_in: [B, S, d] -> [B, S, d]."""
+    x = jnp.einsum("bsd,dw->bsw", x_in, p["w_x"])
+    x = psh.constrain(x, "batch", None, "ff")
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x_in, p["w_gate_branch"])
+                       .astype(jnp.float32))
+    x = _conv(x, p["conv_w"], p["conv_b"])
+    a, gated = _gates(x, p)
+    a = psh.constrain(a, "batch", None, "ff")
+    gated = psh.constrain(gated, "batch", None, "ff")
+
+    def assoc(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(assoc, (a, gated), axis=1)
+    y = (h * gate).astype(x_in.dtype)
+    return jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+
+
+def rglru_init_cache(batch: int, width: int, conv_width: int, dtype):
+    return {"conv": jnp.zeros((batch, conv_width - 1, width), dtype),
+            "h": jnp.zeros((batch, width), jnp.float32)}
+
+
+def rglru_decode(x_in: jax.Array, p: dict, cache: dict):
+    """x_in: [B, 1, d]."""
+    x = jnp.einsum("bsd,dw->bsw", x_in, p["w_x"])[:, 0]
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x_in, p["w_gate_branch"])
+                       .astype(jnp.float32))[:, 0]
+    hist = jnp.concatenate([cache["conv"], x[:, None]], axis=1)
+    x = jnp.einsum("bkw,kw->bw", hist, p["conv_w"]) + p["conv_b"]
+    a, gated = _gates(x[:, None], p)
+    h = a[:, 0] * cache["h"] + gated[:, 0]
+    y = (h * gate).astype(x_in.dtype)
+    out = jnp.einsum("bw,wd->bd", y, p["w_out"])[:, None]
+    return out, {"conv": hist[:, 1:], "h": h}

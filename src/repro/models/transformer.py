@@ -1,0 +1,361 @@
+"""Segment-structured transformer: init / train forward / decode step.
+
+The layer stack is run-length-encoded into segments of identical layer kind
+(config.layer_segments).  Each segment executes as one `lax.scan` over its
+stacked parameters with per-layer remat — HLO size stays O(#segments)
+regardless of depth, which is what makes 512-device dry-run compiles of
+34B-60L models tractable.  Roofline accounting multiplies each scan body's
+cost by its trip count (launch/roofline.py), since XLA's cost_analysis
+counts while-loop bodies once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import psharding as psh
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ArchConfig, layer_segments
+from repro.models.layers import (cross_entropy_loss, layer_norm, mlp_forward,
+                                 mlp_params, rms_norm, sinusoidal_positions)
+
+LOCAL_WINDOW_DEFAULT = 1024
+
+
+def _window_for(cfg: ArchConfig, kind: str) -> int:
+    if kind == "attn_local":
+        return cfg.window or LOCAL_WINDOW_DEFAULT
+    if kind == "attn" and cfg.window:
+        return cfg.window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (pure; use jax.eval_shape for abstract init)
+# ---------------------------------------------------------------------------
+
+def _one_layer_params(kind: str, key, cfg: ArchConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p: dict = {}
+    if kind in ("attn", "attn_local", "attn_global", "moe", "enc", "dec"):
+        p["ln1"] = jnp.zeros((d,), jnp.float32)
+        p["attn"] = attn.attn_params(ks[0], d, h, hkv, hd, dtype)
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        if kind == "moe":
+            p["moe"] = moe_mod.moe_params(ks[1], d, f, cfg.num_experts, dtype)
+        else:
+            p["mlp"] = mlp_params(ks[1], d, f, cfg.mlp_act, dtype)
+        if kind == "dec":
+            p["ln_x"] = jnp.zeros((d,), jnp.float32)
+            p["xattn"] = attn.attn_params(ks[2], d, h, hkv, hd, dtype)
+        if kind in ("enc", "dec"):   # whisper uses LayerNorm biases
+            p["ln1_b"] = jnp.zeros((d,), jnp.float32)
+            p["ln2_b"] = jnp.zeros((d,), jnp.float32)
+            if kind == "dec":
+                p["ln_x_b"] = jnp.zeros((d,), jnp.float32)
+    elif kind == "ssm":
+        p["ln1"] = jnp.zeros((d,), jnp.float32)
+        p["ssm"] = ssm_mod.ssm_params(ks[0], d, cfg.ssm_expand,
+                                      cfg.ssm_head_dim, cfg.ssm_state,
+                                      cfg.ssm_conv_width, dtype)
+    elif kind == "rglru":
+        p["ln1"] = jnp.zeros((d,), jnp.float32)
+        p["rglru"] = rglru_mod.rglru_params(ks[0], d, cfg.lru_width, 4, dtype)
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["mlp"] = mlp_params(ks[1], d, f, cfg.mlp_act, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> dict:
+    keys = jax.random.split(key, len(layer_segments(cfg)) + 2)
+    segs = []
+    for i, (kind, count) in enumerate(layer_segments(cfg)):
+        lk = jax.random.split(keys[i], count)
+        stacked = jax.vmap(
+            lambda k: _one_layer_params(kind, k, cfg, dtype))(lk)
+        segs.append(stacked)
+    params = {
+        "embed": jax.random.normal(keys[-2], (cfg.vocab_padded, cfg.d_model),
+                                   dtype) * 0.02,
+        "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+        "segments": segs,
+    }
+    if cfg.encoder_layers:
+        params["enc_final_ln"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return params
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg, dtype=dtype),
+        jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Train forward
+# ---------------------------------------------------------------------------
+
+def _apply_layer_train(kind: str, p: dict, x, positions, cfg: ArchConfig,
+                       enc_out=None):
+    eps = cfg.norm_eps
+    if kind in ("enc", "dec"):
+        h = layer_norm(x, 1.0 + p["ln1"], p["ln1_b"], eps)
+    else:
+        h = rms_norm(x, p["ln1"], eps)
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "attn_local", "attn_global", "moe", "enc", "dec"):
+        causal = kind != "enc"
+        theta = 0.0 if kind in ("enc", "dec") else cfg.rope_theta
+        x = x + attn.attention_block(
+            h, p["attn"], positions=positions, causal=causal,
+            window=_window_for(cfg, kind), rope_theta=theta,
+            flash_threshold=cfg.flash_threshold)
+        if kind == "dec":
+            hx = layer_norm(x, 1.0 + p["ln_x"], p["ln_x_b"], eps)
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wv"])
+            x = x + attn.attention_block(
+                hx, p["xattn"], positions=positions, causal=False,
+                rope_theta=0.0, kv_override=(k, v))
+        if kind in ("enc", "dec"):
+            h2 = layer_norm(x, 1.0 + p["ln2"], p["ln2_b"], eps)
+        else:
+            h2 = rms_norm(x, p["ln2"], eps)
+        if kind == "moe":
+            y, aux = moe_mod.moe_forward(h2, p["moe"], top_k=cfg.top_k,
+                                         capacity_factor=cfg.capacity_factor,
+                                         dispatch=cfg.moe_dispatch,
+                                         chunk=cfg.moe_chunk)
+            x = x + y
+        else:
+            x = x + mlp_forward(h2, p["mlp"], cfg.mlp_act)
+    elif kind == "ssm":
+        x = x + ssm_mod.ssm_forward(h, p["ssm"], expand=cfg.ssm_expand,
+                                    head_dim=cfg.ssm_head_dim,
+                                    state=cfg.ssm_state)
+    elif kind == "rglru":
+        x = x + rglru_mod.rglru_forward(h, p["rglru"])
+        h2 = rms_norm(x, p["ln2"], eps)
+        x = x + mlp_forward(h2, p["mlp"], cfg.mlp_act)
+    return x, aux
+
+
+def segment_train_body(kind: str, cfg: ArchConfig, remat: bool = True):
+    """The per-layer scan body for a segment (exposed for roofline)."""
+
+    def body(carry, p_i):
+        x, positions, enc_out, aux = carry
+        if cfg.seq_parallel:
+            # Megatron-SP: the residual stream lives seq-sharded over
+            # `model`; XLA turns the entries/exits of attention/MLP into
+            # all-to-alls and all norm/residual elementwise work shrinks
+            # by the TP degree.
+            x = psh.constrain(x, "batch", "q_seq", None)
+        x, a = _apply_layer_train(kind, p_i, x, positions, cfg, enc_out)
+        if cfg.seq_parallel:
+            x = psh.constrain(x, "batch", "q_seq", None)
+        return (x, positions, enc_out, aux + a), ()
+
+    return jax.checkpoint(body) if remat else body
+
+
+def apply_segment_train(kind: str, stacked: dict, x, positions,
+                        cfg: ArchConfig, enc_out=None):
+    body = segment_train_body(kind, cfg, cfg.remat)
+    (x, _, _, aux), _ = jax.lax.scan(
+        body, (x, positions, enc_out, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+def forward_train(params: dict, cfg: ArchConfig, tokens=None, embeds=None,
+                  frames=None):
+    """Returns (logits [B, S, V], aux_loss)."""
+    segs = layer_segments(cfg)
+    if embeds is not None:
+        x = embeds                       # vlm stub: precomputed embeddings
+    else:
+        x = params["embed"][tokens]
+    x = psh.constrain(x, "batch", None, None)
+    b, s, d = x.shape
+    positions = jnp.arange(s)
+    aux_total = jnp.zeros((), jnp.float32)
+    enc_out = None
+    seg_params = params["segments"]
+    idx = 0
+    if cfg.encoder_layers:
+        # whisper: encoder over frame embeddings with sinusoidal positions
+        pe = jnp.asarray(sinusoidal_positions(frames.shape[1], d))
+        xe = frames + pe.astype(frames.dtype)
+        for (kind, count) in segs:
+            if kind != "enc":
+                break
+            xe, _ = apply_segment_train(kind, seg_params[idx], xe,
+                                        jnp.arange(frames.shape[1]), cfg)
+            idx += 1
+        enc_out = rms_norm(xe, params["enc_final_ln"], cfg.norm_eps)
+        pd = jnp.asarray(sinusoidal_positions(s, d))
+        x = x + pd.astype(x.dtype)
+    for (kind, count) in segs[idx:]:
+        x, aux = apply_segment_train(kind, seg_params[idx], x, positions,
+                                     cfg, enc_out)
+        aux_total = aux_total + aux
+        idx += 1
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    logits = psh.constrain(logits, "batch", None, "vocab")
+    return logits, aux_total
+
+
+def prefill_step(params: dict, cfg: ArchConfig, batch: dict):
+    """Inference prefill: full forward over the prompt, next-token logits.
+
+    Returns logits [B, V] for the last position (the serving handoff point;
+    KV-cache materialization is the decode path's ring/full caches — see
+    DESIGN.md §5 for why prefill compute, not cache writes, is the roofline
+    object for the prefill_32k cell)."""
+    logits, _ = forward_train(
+        params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+        frames=batch.get("frames"))
+    return logits[:, -1]
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict):
+    logits, aux = forward_train(
+        params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+        frames=batch.get("frames"))
+    loss = cross_entropy_loss(logits, batch["labels"],
+                              batch.get("loss_mask"),
+                              valid_vocab=cfg.vocab_size)
+    return loss + 0.01 * aux, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16, enc_len: int = 0):
+    """Per-segment cache stacks.  cache_len = full KV length for global
+    layers; windowed layers get a ring of min(window, cache_len)."""
+    segs = layer_segments(cfg)
+    caches = []
+    for kind, count in segs:
+        if kind in ("attn", "attn_local", "attn_global", "moe", "dec"):
+            w = _window_for(cfg, kind)
+            clen = min(w, cache_len) if w else cache_len
+            c = {
+                "k": jnp.zeros((count, batch, clen, cfg.num_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((count, batch, clen, cfg.num_kv_heads,
+                                cfg.head_dim), dtype),
+            }
+            if kind == "dec":
+                c["xk"] = jnp.zeros((count, batch, enc_len, cfg.num_kv_heads,
+                                     cfg.head_dim), dtype)
+                c["xv"] = jnp.zeros((count, batch, enc_len, cfg.num_kv_heads,
+                                     cfg.head_dim), dtype)
+            caches.append(c)
+        elif kind == "ssm":
+            c1 = ssm_mod.ssm_init_cache(batch, cfg.d_model, cfg.ssm_expand,
+                                        cfg.ssm_head_dim, cfg.ssm_state,
+                                        cfg.ssm_conv_width, dtype)
+            caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), c1))
+        elif kind == "rglru":
+            c1 = rglru_mod.rglru_init_cache(batch, cfg.lru_width, 4, dtype)
+            caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), c1))
+        elif kind == "enc":
+            caches.append({})
+    return caches
+
+
+def _apply_layer_decode(kind: str, p: dict, x, cache, pos, cfg: ArchConfig):
+    eps = cfg.norm_eps
+    if kind == "dec":
+        h = layer_norm(x, 1.0 + p["ln1"], p["ln1_b"], eps)
+    else:
+        h = rms_norm(x, p["ln1"], eps)
+    if kind in ("attn", "attn_local", "attn_global", "moe", "dec"):
+        theta = 0.0 if kind == "dec" else cfg.rope_theta
+        w = _window_for(cfg, kind)
+        y, kv = attn.attention_decode(h, p["attn"],
+                                      {"k": cache["k"], "v": cache["v"]},
+                                      pos, window=w, rope_theta=theta)
+        x = x + y
+        new_cache = dict(cache)
+        new_cache.update(kv)
+        if kind == "dec":
+            hx = layer_norm(x, 1.0 + p["ln_x"], p["ln_x_b"], eps)
+            o = attn.attention_block(hx, p["xattn"],
+                                     positions=jnp.full((x.shape[0], 1), pos),
+                                     causal=False, rope_theta=0.0,
+                                     kv_override=(cache["xk"], cache["xv"]))
+            x = x + o
+        if kind == "dec":
+            h2 = layer_norm(x, 1.0 + p["ln2"], p["ln2_b"], eps)
+        else:
+            h2 = rms_norm(x, p["ln2"], eps)
+        if kind == "moe":
+            y, _ = moe_mod.moe_forward(h2, p["moe"], top_k=cfg.top_k,
+                                       capacity_factor=cfg.capacity_factor,
+                                       dispatch=cfg.moe_dispatch,
+                                       chunk=cfg.moe_chunk)
+            x = x + y
+        else:
+            x = x + mlp_forward(h2, p["mlp"], cfg.mlp_act)
+    elif kind == "ssm":
+        y, new_cache = ssm_mod.ssm_decode(h, p["ssm"], cache,
+                                          expand=cfg.ssm_expand,
+                                          head_dim=cfg.ssm_head_dim,
+                                          state=cfg.ssm_state)
+        x = x + y
+    elif kind == "rglru":
+        y, new_cache = rglru_mod.rglru_decode(h, p["rglru"], cache)
+        x = x + y
+        h2 = rms_norm(x, p["ln2"], eps)
+        x = x + mlp_forward(h2, p["mlp"], cfg.mlp_act)
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+def serve_step(params: dict, cfg: ArchConfig, caches: list, tokens, pos):
+    """One decode step.  tokens: int32[B]; pos: scalar position.
+
+    Returns (logits [B, V], new caches)."""
+    x = params["embed"][tokens][:, None]          # [B, 1, d]
+    if cfg.encoder_layers:
+        pd = jnp.asarray(sinusoidal_positions(1, cfg.d_model))
+        x = x + pd.astype(x.dtype)
+    new_caches = []
+    idx = 0
+    for seg_i, (kind, count) in enumerate(layer_segments(cfg)):
+        stacked_p = params["segments"][seg_i]
+        cache = caches[seg_i]
+        if kind == "enc":
+            new_caches.append(cache)
+            continue
+
+        def body(x, pc):
+            p_i, c_i = pc
+            x, c2 = _apply_layer_decode(kind, p_i, x, c_i, pos, cfg)
+            return x, c2
+
+        x, c_new = jax.lax.scan(body, x, (stacked_p, cache))
+        new_caches.append(c_new)
+        idx += 1
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x[:, 0:1], params["embed"])[:, 0]
+    logits = psh.constrain(logits, "batch", "vocab")
+    return logits[:, : cfg.vocab_size], new_caches

@@ -1,0 +1,37 @@
+"""Gradient compression: int8 quantization with per-tensor scale.
+
+Optional wrapper around the gradient tree before the (GSPMD-inserted)
+all-reduce: quantize to int8 with stochastic rounding, dequantize after.
+At 512 chips this cuts gradient all-reduce bytes 4x (bf16->int8 would be
+2x; fp32 master grads -> int8 is 4x).  Off by default; enabled per
+TrainConfig.grad_compress.  Tests bound the quantization error.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array, key) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    x = g.astype(jnp.float32) / scale
+    noise = jax.random.uniform(key, g.shape) - 0.5
+    q = jnp.clip(jnp.round(x + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, key):
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = [quantize(g, k) for g, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, [d for d, _ in out]), \
+        jax.tree_util.tree_unflatten(treedef, [s for _, s in out])
+
+
+def decompress_tree(qtree, stree):
+    return jax.tree.map(dequantize, qtree, stree)

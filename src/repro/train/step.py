@@ -1,0 +1,159 @@
+"""Train / serve step builders with mesh shardings.
+
+``build_train_step`` returns a jitted (state, batch) -> (state, metrics)
+with param/optimizer shardings from launch.shardings; ``build_serve_step``
+returns a jitted (params, caches, tokens, pos) -> (logits, caches).
+These are the functions the dry-run lowers for every (arch x shape x mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import shardings as sh
+from repro.models.config import ArchConfig
+from repro.models.transformer import loss_fn, prefill_step, serve_step
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = dataclasses.field(
+        default_factory=adamw.AdamWConfig)
+    grad_compress: bool = False
+    # gradient-accumulation microbatches: bounds the live activation set to
+    # one microbatch (the per-device HBM-fit knob at 4k x 256 batches)
+    microbatches: int = 1
+
+
+def train_step_fn(cfg: ArchConfig, tcfg: TrainConfig, state: dict,
+                  batch: dict):
+    params = state["params"]
+
+    def loss_of(p, b):
+        loss, metrics = loss_fn(p, cfg, b)
+        return loss, metrics
+
+    nm = tcfg.microbatches
+    if nm > 1:
+        from repro.models import psharding as psh
+
+        def micro_split(x):
+            return x.reshape(nm, x.shape[0] // nm, *x.shape[1:])
+
+        mb_stack = jax.tree.map(micro_split, batch)
+
+        def micro_step(gsum, mb):
+            # re-pin the microbatch's batch dim to the data axes
+            mb = jax.tree.map(
+                lambda x: psh.constrain(x, "batch"), mb)
+            (loss, metrics), g = jax.value_and_grad(
+                loss_of, has_aux=True)(params, mb)
+            gsum = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return gsum, (loss, metrics)
+
+        gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        gsum, (losses, metrics_all) = jax.lax.scan(micro_step, gzero,
+                                                   mb_stack)
+        grads = jax.tree.map(lambda g: g / nm, gsum)
+        loss = losses.mean()
+        metrics = jax.tree.map(lambda m: m.mean(), metrics_all)
+    else:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(params, batch)
+    if tcfg.grad_compress:
+        from repro.train import compress
+        key = jax.random.fold_in(jax.random.key(0), state["opt"]["step"])
+        q, s = compress.compress_tree(grads, key)
+        grads = compress.decompress_tree(q, s)
+    new_params, new_opt, opt_metrics = adamw.apply_updates(
+        params, grads, state["opt"], tcfg.optimizer)
+    metrics = dict(metrics, **opt_metrics, total_loss=loss)
+    return {"params": new_params, "opt": new_opt}, metrics
+
+
+def init_train_state(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> dict:
+    from repro.models.transformer import init_params
+    params = init_params(cfg, key, dtype)
+    return {"params": params, "opt": adamw.init_state(params)}
+
+
+def abstract_train_state(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_train_state, cfg, dtype=dtype),
+        jax.random.key(0))
+
+
+def state_shardings(abstract_state, mesh):
+    """Params + optimizer m/v share specs; step is replicated."""
+    p_sh = sh.param_shardings(abstract_state["params"], mesh)
+    return {
+        "params": p_sh,
+        "opt": {
+            "m": sh.param_shardings(abstract_state["opt"]["m"], mesh),
+            "v": sh.param_shardings(abstract_state["opt"]["v"], mesh),
+            "step": NamedSharding(mesh, P()),
+        },
+    }
+
+
+def build_train_step(cfg: ArchConfig, mesh, tcfg: TrainConfig | None = None,
+                     abstract_state=None, abstract_batch=None):
+    """Returns (jitted_fn, state_shardings, batch_shardings)."""
+    tcfg = tcfg or TrainConfig()
+    abstract_state = abstract_state or abstract_train_state(cfg)
+    st_sh = state_shardings(abstract_state, mesh)
+    b_sh = (sh.batch_shardings(abstract_batch, mesh)
+            if abstract_batch is not None else None)
+
+    def wrapped(state, batch):
+        # ambient mesh at trace time -> psharding.constrain hints apply
+        with jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+            return train_step_fn(cfg, tcfg, state, batch)
+
+    fn = jax.jit(
+        wrapped,
+        in_shardings=(st_sh, b_sh),
+        out_shardings=(st_sh, None),
+        donate_argnums=(0,))
+    return fn, st_sh, b_sh
+
+
+def build_prefill_step(cfg: ArchConfig, mesh, abstract_params=None,
+                       abstract_batch=None):
+    """Returns (jitted_fn, param_shardings, batch_shardings)."""
+    p_sh = sh.param_shardings(abstract_params, mesh)
+    b_sh = (sh.batch_shardings(abstract_batch, mesh)
+            if abstract_batch is not None else None)
+    def wrapped(params, batch):
+        with jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+            return prefill_step(params, cfg, batch)
+
+    jfn = jax.jit(wrapped, in_shardings=(p_sh, b_sh))
+    return jfn, p_sh, b_sh
+
+
+def build_serve_step(cfg: ArchConfig, mesh, abstract_params=None,
+                     abstract_caches=None, abstract_tokens=None,
+                     seq_axis_joint: bool = False):
+    """Returns (jitted_fn, param_shardings, cache_shardings)."""
+    p_sh = sh.param_shardings(abstract_params, mesh)
+    c_sh = sh.cache_shardings(abstract_caches, mesh,
+                              seq_axis_joint=seq_axis_joint)
+    tok_shape = (abstract_tokens.shape if abstract_tokens is not None
+                 else (1,))
+    tok_sh = NamedSharding(mesh, sh.batch_pspec(tok_shape, dict(mesh.shape)))
+
+    def fn(params, caches, tokens, pos):
+        with jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+            return serve_step(params, cfg, caches, tokens, pos)
+
+    jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, tok_sh, None),
+                  out_shardings=(None, c_sh), donate_argnums=(1,))
+    return jfn, p_sh, c_sh

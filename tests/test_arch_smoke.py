@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs.  Full configs are exercised only
+via the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_reduced_config
+from repro.models import (init_decode_state, init_params, loss_fn,
+                          serve_step)
+from repro.models.config import layer_plan_kinds
+
+
+def _batch_for(cfg, B=2, S=16, enc_len=8):
+    batch = {"labels": jnp.zeros((B, S), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        batch["embeds"] = jnp.full((B, S, cfg.d_model), 0.01, jnp.bfloat16)
+    elif cfg.frontend == "audio_stub":
+        batch["tokens"] = jnp.zeros((B, S), jnp.int32)
+        batch["frames"] = jnp.full((B, enc_len, cfg.d_model), 0.01,
+                                   jnp.bfloat16)
+    else:
+        batch["tokens"] = jnp.zeros((B, S), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_train_step(name):
+    cfg = get_reduced_config(name)
+    params = init_params(cfg, jax.random.key(0))
+    batch = _batch_for(cfg)
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(lambda p, b: loss_fn(p, cfg, b),
+                           has_aux=True))(params, batch)
+    assert np.isfinite(float(loss)), name
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in flat), name
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_serve_step(name):
+    cfg = get_reduced_config(name)
+    params = init_params(cfg, jax.random.key(0))
+    B = 2
+    caches = init_decode_state(cfg, B, 32, enc_len=8)
+    logits, caches2 = jax.jit(
+        lambda p, c, t, pos: serve_step(p, cfg, c, t, pos))(
+        params, caches, jnp.zeros((B,), jnp.int32), jnp.int32(1))
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), name
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_full_config_matches_assignment(name):
+    """The full configs carry the exact assigned dimensions."""
+    cfg = get_config(name)
+    expect = {
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    }[name]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expect, (name, got, expect)
+
+
+def test_layer_patterns():
+    g = layer_plan_kinds(get_config("gemma3-4b"))
+    assert len(g) == 34
+    assert g.count("attn_global") == 5            # 5:1 local:global
+    assert all(k == "attn_global" for i, k in enumerate(g) if i % 6 == 5)
+    r = layer_plan_kinds(get_config("recurrentgemma-2b"))
+    assert len(r) == 26
+    assert r.count("attn_local") == 8             # 2 RG-LRU : 1 attn
+    assert r.count("rglru") == 18
+    w = layer_plan_kinds(get_config("whisper-small"))
+    assert w.count("enc") == 12 and w.count("dec") == 12
+    m = layer_plan_kinds(get_config("mamba2-370m"))
+    assert set(m) == {"ssm"} and len(m) == 48
+
+
+def test_moe_configs():
+    q = get_config("qwen3-moe-30b-a3b")
+    assert q.num_experts == 128 and q.top_k == 8 and q.head_dim == 128
+    p = get_config("phi3.5-moe-42b-a6.6b")
+    assert p.num_experts == 16 and p.top_k == 2
+
+
+def test_param_counts_in_expected_range():
+    """Sanity-check param_count against the advertised model sizes."""
+    bounds = {
+        "llama3-8b": (7e9, 9e9),
+        "llama3.2-3b": (2.8e9, 4e9),
+        "mamba2-370m": (3e8, 4.5e8),
+        "h2o-danube-1.8b": (1.4e9, 2.2e9),
+        "gemma3-4b": (3e9, 5.5e9),
+        "recurrentgemma-2b": (2e9, 3.5e9),
+        "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+        "qwen3-moe-30b-a3b": (26e9, 34e9),
+        "llava-next-34b": (32e9, 36e9),
+        "whisper-small": (2e8, 3.5e8),
+    }
+    for name, (lo, hi) in bounds.items():
+        n = get_config(name).param_count()
+        assert lo <= n <= hi, (name, f"{n:.3e}", lo, hi)

@@ -1,0 +1,110 @@
+"""Distributed-BFS tests.
+
+Multi-device cases run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the main pytest
+process keeps seeing exactly 1 device (per the dry-run isolation rule).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import bfs_oracle, partition_graph
+from repro.core.bfs_distributed import DistConfig, DistributedBFS
+from repro.graph import get_dataset
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_single_shard_mesh_matches_oracle():
+    ds = get_dataset("tiny-16-4")
+    pg = partition_graph(ds.csr, ds.csc, 1)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    eng = DistributedBFS(pg, mesh, cfg=DistConfig(dispatch="bitmap"))
+    lev = eng.run(0)
+    np.testing.assert_array_equal(lev, bfs_oracle(ds.csr, 0))
+
+
+_SUBPROC = textwrap.dedent("""
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from repro.graph import get_dataset
+    from repro.core import bfs_oracle, partition_graph
+    from repro.core.bfs_distributed import DistributedBFS, DistConfig
+    from repro.core.scheduler import SchedulerConfig
+
+    ds = get_dataset("small-12-8")
+    pg = partition_graph(ds.csr, ds.csc, 8)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    orc = bfs_oracle(ds.csr, 7)
+    out = {}
+    for dispatch, crossbar in [("bitmap", "staged"), ("bitmap", "flat"),
+                               ("queue", "flat")]:
+        cfg = DistConfig(dispatch=dispatch, crossbar=crossbar,
+                         queue_capacity=256,
+                         scheduler=SchedulerConfig(policy="beamer"))
+        eng = DistributedBFS(pg, mesh, cfg=cfg)
+        lev = eng.run(7)
+        out[f"{dispatch}-{crossbar}"] = bool(np.array_equal(lev, orc))
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_multidevice_dispatch_modes():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][0]
+    res = json.loads(line[len("RESULT "):])
+    assert all(res.values()), res
+
+
+_SUBPROC_PES = textwrap.dedent("""
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from repro.graph import get_dataset
+    from repro.core import bfs_oracle, partition_graph
+    from repro.core.bfs_distributed import DistributedBFS, DistConfig
+
+    ds = get_dataset("small-12-8")
+    orc = bfs_oracle(ds.csr, 7)
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    out = {}
+    # k PEs per PC (Fig. 10's scaling direction) x partition schemes
+    for k in (1, 2, 4):
+        for scheme in ("hash", "contiguous"):
+            for dispatch in ("bitmap", "queue"):
+                pg = partition_graph(ds.csr, ds.csc, 8 * k, scheme=scheme)
+                eng = DistributedBFS(pg, mesh, cfg=DistConfig(
+                    dispatch=dispatch, queue_capacity=512))
+                lev = eng.run(7)
+                out[f"k{k}-{scheme}-{dispatch}"] = bool(
+                    np.array_equal(lev, orc))
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_multidevice_pes_per_pc_and_schemes():
+    """k>1 shards (PEs) per device x hash/contiguous x dispatch engines."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SUBPROC_PES], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][0]
+    res = json.loads(line[len("RESULT "):])
+    assert all(res.values()), res

@@ -1,0 +1,42 @@
+"""Pallas flash-attention kernel vs the pure-jnp oracle (interpret mode):
+shape/dtype/block sweeps + hypothesis property runs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _run(bh, s, hd, bq, bk, causal, dt, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (bh, s, hd), dt)
+    k = jax.random.normal(ks[1], (bh, s, hd), dt)
+    v = jax.random.normal(ks[2], (bh, s, hd), dt)
+    o = flash_attention_pallas(q, k, v, causal=causal, block_q=bq,
+                               block_k=bk)
+    o_ref = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dt == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("s,bq,bk", [(256, 128, 128), (256, 64, 256),
+                                     (512, 128, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_blocks(s, bq, bk, causal):
+    _run(2, s, 64, bq, bk, causal, jnp.float32)
+
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("hd", [32, 64, 128])
+def test_flash_dtypes_headdims(dt, hd):
+    _run(1, 256, hd, 128, 128, True, dt)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 30))
+def test_flash_property(seed):
+    _run(2, 256, 32, 128, 128, True, jnp.float32, seed=seed % 9973)

@@ -1,0 +1,93 @@
+"""The loop-aware HLO parser vs hand-countable references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze_hlo_text, parse_hlo, aggregate
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_dot_flops():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    out = analyze_hlo_text(_hlo(lambda x, y: x @ y, a, b))
+    assert out["flops"] == 2 * 64 * 128 * 32
+
+
+def test_scan_multiplies_trip_count():
+    a = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+
+    def fn(x):
+        def body(c, _):
+            return c @ c, ()
+        c, _ = jax.lax.scan(body, x, None, length=7)
+        return c
+
+    out = analyze_hlo_text(_hlo(fn, a))
+    # 7 iterations x one 16^3 matmul
+    assert out["flops"] == 7 * 2 * 16 ** 3
+
+
+def test_nested_scan_multiplies():
+    a = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+
+    def fn(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ ci, ()
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, ()
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c
+
+    out = analyze_hlo_text(_hlo(fn, a))
+    assert out["flops"] == 5 * 3 * 2 * 8 ** 3
+
+
+def test_symbol_table_resolves_operand_shapes():
+    """Optimized HLO prints operands as bare names; contraction sizes must
+    come from the per-computation symbol table."""
+    a = jax.ShapeDtypeStruct((4, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 8), jnp.float32)
+
+    def fn(x, y):
+        return (x * 2.0) @ (y + 1.0)
+
+    out = analyze_hlo_text(_hlo(fn, a, b))
+    assert out["flops"] == 2 * 4 * 256 * 8
+
+
+def test_computation_headers_with_tuple_params():
+    """While-loop bodies have tuple-typed params whose nested parens broke
+    a regex-based header parser once; ops inside must still be found."""
+    a = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+
+    def fn(x):
+        def body(carry, _):
+            c, d = carry
+            return (c @ c, d + 1), ()
+        (c, d), _ = jax.lax.scan(body, (x, jnp.zeros(())), None, length=4)
+        return c, d
+
+    text = _hlo(fn, a)
+    out = analyze_hlo_text(text)
+    assert out["flops"] == 4 * 2 * 16 ** 3
+
+
+def test_dus_aliasing_discount():
+    """In-place cache updates must not count the full carried buffer."""
+    cache = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)  # 4 MB
+    row = jax.ShapeDtypeStruct((1, 1024), jnp.float32)
+
+    def fn(c, r):
+        return jax.lax.dynamic_update_slice(c, r, (5, 0))
+
+    out = analyze_hlo_text(_hlo(fn, cache, row))
+    full = 1024 * 1024 * 4
+    # the un-donated input is copied once on CPU (2*full); the DUS itself
+    # must contribute ~0 -- without the aliasing discount this would be
+    # >= 4*full (copy + DUS operand+result)
+    assert out["bytes"] < 2.2 * full, out["bytes"]

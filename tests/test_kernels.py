@@ -1,0 +1,139 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles (interpret mode).
+
+Sweeps shapes/dtypes per the assignment; property-based bit-level checks via
+hypothesis.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.bitmap_update import bitmap_update
+from repro.kernels.csr_gather import gather_pages
+from repro.kernels.pull_spmv import pull_spmv_blocks
+
+
+# ---------------------------------------------------------------------------
+# bitmap_update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows", [8, 16, 64, 256])
+@pytest.mark.parametrize("block_rows", [8, 16])
+def test_bitmap_update_shapes(rows, block_rows):
+    if rows % block_rows:
+        pytest.skip("block must divide rows")
+    rng = np.random.default_rng(rows * 31 + block_rows)
+    cand = jnp.asarray(rng.integers(0, 2**32, (rows, 128), dtype=np.uint32))
+    vis = jnp.asarray(rng.integers(0, 2**32, (rows, 128), dtype=np.uint32))
+    nf, vo, cnt = bitmap_update(cand, vis, block_rows=block_rows)
+    nf_r, vo_r, cnt_r = ref.bitmap_update_ref(cand, vis)
+    np.testing.assert_array_equal(np.asarray(nf), np.asarray(nf_r))
+    np.testing.assert_array_equal(np.asarray(vo), np.asarray(vo_r))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_r))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+def test_bitmap_update_property(seed_a, seed_b):
+    rng = np.random.default_rng([seed_a, seed_b])
+    cand = jnp.asarray(rng.integers(0, 2**32, (8, 128), dtype=np.uint32))
+    vis = jnp.asarray(rng.integers(0, 2**32, (8, 128), dtype=np.uint32))
+    nf, vo, cnt = bitmap_update(cand, vis, block_rows=8)
+    # invariants: new ∩ visited_in = ∅; visited_out = visited_in ∪ new;
+    # count == popcount(new); idempotence on re-application.
+    assert int(jnp.sum(jax.lax.population_count(nf & vis))) == 0
+    np.testing.assert_array_equal(np.asarray(vo), np.asarray(vis | nf))
+    assert int(cnt[0, 0]) == int(
+        jnp.sum(jax.lax.population_count(nf).astype(jnp.int32)))
+    nf2, vo2, cnt2 = bitmap_update(cand, vo, block_rows=8)
+    assert int(cnt2[0, 0]) == 0 and bool((vo2 == vo).all())
+
+
+def test_fused_frontier_update_flat_odd_sizes():
+    for w in [1, 31, 128, 1000, 4096, 5000]:
+        rng = np.random.default_rng(w)
+        c = jnp.asarray(rng.integers(0, 2**32, (w,), dtype=np.uint32))
+        v = jnp.asarray(rng.integers(0, 2**32, (w,), dtype=np.uint32))
+        nf, vo, cnt = ops.fused_frontier_update(c, v)
+        np.testing.assert_array_equal(np.asarray(nf), np.asarray(c & ~v))
+        np.testing.assert_array_equal(np.asarray(vo), np.asarray(v | (c & ~v)))
+
+
+# ---------------------------------------------------------------------------
+# csr_gather (HBM reader)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_pages,page,m", [
+    (8, 128, 4), (32, 256, 17), (64, 512, 64), (128, 128, 1),
+])
+def test_gather_pages(num_pages, page, m):
+    rng = np.random.default_rng(num_pages + page + m)
+    edges = jnp.asarray(
+        rng.integers(0, 10**6, (num_pages, page), dtype=np.int32))
+    pids = jnp.asarray(rng.integers(0, num_pages, (m,), dtype=np.int32))
+    out = gather_pages(edges, pids)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.gather_pages_ref(edges, pids)))
+
+
+def test_page_table_covers_all_neighbor_lists():
+    rng = np.random.default_rng(7)
+    page = 64
+    degrees = rng.integers(0, 200, 50)
+    starts = np.concatenate([[0], np.cumsum(degrees)[:-1]])
+    total = int(degrees.sum())
+    edges = rng.integers(0, 1000, ((total + page - 1) // page) * page,
+                         dtype=np.int32)
+    pids, owner, offs = ops.build_page_table(starts, degrees, page, 512)
+    got = np.asarray(ops.read_neighbor_pages(jnp.asarray(edges),
+                                             jnp.asarray(pids), page))
+    # reassemble each vertex's list from its fetched pages and compare
+    for v in range(50):
+        if degrees[v] == 0:
+            continue
+        items = [i for i in range(len(owner)) if owner[i] == v]
+        parts = []
+        need = degrees[v]
+        for j, i in enumerate(items):
+            lo = offs[i]
+            take = min(need, page - lo)
+            parts.append(got[i][lo: lo + take])
+            need -= take
+        want = edges[starts[v]: starts[v] + degrees[v]]
+        np.testing.assert_array_equal(np.concatenate(parts), want)
+
+
+# ---------------------------------------------------------------------------
+# pull_spmv (MXU boolean SpMV)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,lanes", [(128, 1), (128, 8), (128, 128), (256, 4)])
+@pytest.mark.parametrize("density", [0.01, 0.2])
+def test_pull_spmv(b, lanes, density):
+    rng = np.random.default_rng(b + lanes)
+    nb, rb, cb = 12, 4, 4
+    blocks = jnp.asarray((rng.random((nb, b, b)) < density)
+                         .astype(np.float32)).astype(jnp.bfloat16)
+    brow = jnp.asarray(np.sort(rng.integers(0, rb, nb)).astype(np.int32))
+    bcol = jnp.asarray(rng.integers(0, cb, nb, dtype=np.int32))
+    f = jnp.asarray((rng.random((cb, b, lanes)) < 0.3)
+                    .astype(np.float32)).astype(jnp.bfloat16)
+    got = ops.pull_spmv(blocks, brow, bcol, f, rb)
+    want = ref.pull_spmv_blocks_ref(blocks, brow, bcol, None, f, rb) > 0
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pull_spmv_is_boolean_semiring():
+    """OR-AND semiring result == reachability through one block step."""
+    rng = np.random.default_rng(3)
+    b = 128
+    a_np = (rng.random((b, b)) < 0.05)
+    f_np = (rng.random((b, 1)) < 0.5)
+    blocks = jnp.asarray(a_np[None].astype(np.float32)).astype(jnp.bfloat16)
+    f = jnp.asarray(f_np[None].astype(np.float32)).astype(jnp.bfloat16)
+    got = np.asarray(ops.pull_spmv(blocks, jnp.zeros(1, jnp.int32),
+                                   jnp.zeros(1, jnp.int32), f, 1))[0, :, 0]
+    want = (a_np @ f_np.astype(np.int64))[:, 0] > 0
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,112 @@
+"""Property-based tests (hypothesis) on framework invariants."""
+import hypothesis
+from hypothesis import given, settings, strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import partition_graph, reindex, unreindex
+from repro.graph.csr import csr_from_edges, transpose_csr
+from repro.models import moe
+from repro.models.psharding import RULES, spec_for
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self._shape = dict(shape)
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+
+    @property
+    def shape(self):
+        return self._shape
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.tuples(st.integers(1, 512), st.integers(1, 512),
+                 st.integers(1, 512)),
+       st.sampled_from([("pod", 2), ("data", 16), ("model", 16)]))
+def test_spec_for_divisibility(shape, axis):
+    """Any axis spec_for assigns must divide the dim evenly."""
+    mesh = _FakeMesh([("pod", 2), ("data", 16), ("model", 16)])
+    spec = spec_for(shape, ("batch", "seq", "ff"), mesh)
+    if spec is None:
+        return
+    sizes = dict(mesh.shape)
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = int(np.prod([sizes[a] for a in axes]))
+        assert shape[dim] % total == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 8),
+       st.sampled_from(["hash", "contiguous"]), st.integers(0, 2 ** 31 - 1))
+def test_partition_covers_all_edges(scale, q, scheme, seed):
+    """Every edge of the input graph appears in exactly one shard."""
+    n = 1 << scale
+    rng = np.random.default_rng(seed)
+    m = max(2 * n, 8)
+    src = rng.integers(0, n, m).astype(np.int64)
+    dst = rng.integers(0, n, m).astype(np.int64)
+    csr = csr_from_edges(src, dst, n)
+    csc = transpose_csr(csr)
+    pg = partition_graph(csr, csc, q, scheme=scheme)
+    # total real (non-pad) edge slots == |E| for both CSR and CSC shards
+    assert int((pg.out_indices >= 0).sum()) == csr.indices.size
+    assert int((pg.in_indices >= 0).sum()) == csc.indices.size
+    # per-shard indptr accounts for every owned vertex's full list
+    assert int(pg.out_indptr[:, -1].sum()) == csr.indices.size
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 16), st.integers(0, 10_000))
+def test_reindex_roundtrip(q, v):
+    vl = 32 * max(1, (10_000 // q) // 32 + 1)
+    g = reindex(np.asarray([v]), q, vl)
+    assert unreindex(g, q, vl)[0] == v
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 16), st.integers(1, 4), st.integers(0, 2 ** 30),
+       st.floats(0.3, 2.0))
+def test_moe_dispatch_engines_agree(e, k, seed, capf):
+    """gather == onehot for arbitrary expert counts / top-k / capacity."""
+    k = min(k, e)
+    d, f = 16, 24
+    p = moe.moe_params(jax.random.key(seed % 1000), d, f, e, jnp.float32)
+    x = jax.random.normal(jax.random.key(seed % 997), (2, 12, d),
+                          jnp.float32)
+    y1, a1 = moe.moe_forward(x, p, top_k=k, chunk=8, capacity_factor=capf,
+                             dispatch="onehot")
+    y2, a2 = moe.moe_forward(x, p, top_k=k, chunk=8, capacity_factor=capf,
+                             dispatch="gather")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    assert abs(float(a1 - a2)) < 1e-5
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 30))
+def test_ssd_chunked_matches_decode(seed):
+    """Chunked SSD forward == sequential single-step recurrence."""
+    from repro.models import ssm
+    B, S, d, expand, hd, N, cw = 1, 19, 8, 2, 4, 4, 4
+    p = ssm.ssm_params(jax.random.key(seed % 1000), d, expand, hd, N, cw,
+                       jnp.float32)
+    x = jax.random.normal(jax.random.key(seed % 991), (B, S, d),
+                          jnp.float32) * 0.3
+    y_chunk = ssm.ssm_forward(x, p, expand=expand, head_dim=hd, state=N,
+                              chunk=8)
+    cache = ssm.ssm_init_cache(B, d, expand, hd, N, cw, jnp.float32)
+    ys = []
+    for t in range(S):
+        yt, cache = ssm.ssm_decode(x[:, t:t + 1], p, cache, expand=expand,
+                                   head_dim=hd, state=N)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y_chunk),
+                               np.asarray(jnp.concatenate(ys, 1)),
+                               atol=5e-4)
