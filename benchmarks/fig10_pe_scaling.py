@@ -13,6 +13,7 @@ from benchmarks.common import run_subprocess
 
 CODE = """
 import numpy as np, jax, json, time
+from repro.compat import make_mesh
 from repro.graph import get_dataset
 from repro.core import partition_graph
 from repro.core.bfs_distributed import DistributedBFS, DistConfig
@@ -20,8 +21,7 @@ from repro.core.bfs_distributed import DistributedBFS, DistConfig
 D, Q = {devices}, {shards}
 ds = get_dataset("{graph}")
 pg = partition_graph(ds.csr, ds.csc, Q)
-mesh = jax.make_mesh((D,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((D,), ("data",))
 # Q shards over D devices: leading shard axis splits Q/D per device
 eng = DistributedBFS(pg, mesh, cfg=DistConfig(dispatch="bitmap",
                                               crossbar="flat"))

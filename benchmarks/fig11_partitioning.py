@@ -17,6 +17,7 @@ from repro.core import partition_graph
 
 CODE = """
 import numpy as np, jax, json, time
+from repro.compat import make_mesh
 from repro.graph import get_dataset
 from repro.core import bfs_oracle, partition_graph
 from repro.core.bfs_distributed import DistributedBFS, DistConfig
@@ -28,8 +29,7 @@ root = int(np.argmax(deg))
 out = {{}}
 for scheme in ("hash", "contiguous"):
     pg = partition_graph(ds.csr, ds.csc, N, scheme=scheme)
-    mesh = jax.make_mesh((N,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((N,), ("data",))
     eng = DistributedBFS(pg, mesh, cfg=DistConfig(dispatch="bitmap",
                                                   crossbar="flat"))
     lev = eng.run(root)

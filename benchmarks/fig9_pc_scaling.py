@@ -17,6 +17,7 @@ from benchmarks.common import run_subprocess
 
 CODE = """
 import numpy as np, jax, json
+from repro.compat import make_mesh
 from repro.graph import get_dataset
 from repro.core import bfs_oracle, partition_graph
 from repro.core.bfs_distributed import DistributedBFS, DistConfig
@@ -25,8 +26,7 @@ import time
 N = {devices}
 ds = get_dataset("{graph}")
 pg = partition_graph(ds.csr, ds.csc, N)
-mesh = jax.make_mesh((N,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((N,), ("data",))
 eng = DistributedBFS(pg, mesh, cfg=DistConfig(dispatch="bitmap",
                                               crossbar="flat"))
 deg = np.diff(ds.csr.indptr)

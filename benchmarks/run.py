@@ -15,7 +15,7 @@ import traceback
 
 from benchmarks import (fig7_perf_model, fig8_hybrid_modes, fig9_pc_scaling,
                         fig10_pe_scaling, fig11_partitioning,
-                        roofline_report, table3_real_graphs)
+                        msbfs_throughput, roofline_report, table3_real_graphs)
 from benchmarks.common import print_rows, save
 
 BENCHES = {
@@ -37,6 +37,10 @@ BENCHES = {
               lambda quick: fig11_partitioning.run(
                   graphs=("rmat18-16",) if quick
                   else ("rmat18-16", "lj-like"))),
+    "msbfs": ("MS-BFS aggregate TEPS vs concurrent batch size",
+              lambda quick: msbfs_throughput.run(
+                  graph="rmat14-8" if quick else "rmat16-16",
+                  batch_sizes=(1, 4, 16) if quick else (1, 2, 4, 8, 16, 32))),
     "table3": ("real-world graph throughput (Table III)",
                lambda quick: table3_real_graphs.run()),
     "roofline": ("dry-run roofline aggregation (§Roofline)",

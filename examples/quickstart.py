@@ -12,6 +12,7 @@
 import numpy as np
 import jax
 
+from repro.compat import make_mesh
 from repro.core import (BFSRunner, SchedulerConfig, bfs_oracle,
                         build_local_graph, partition_graph)
 from repro.core.bfs_distributed import DistConfig, DistributedBFS
@@ -41,8 +42,7 @@ def main():
     # -- 3. distributed engine (paper §IV) ---------------------------------
     q = 4                                  # 4 PEs on 1 device (PC)
     pg = partition_graph(ds.csr, ds.csc, q)
-    mesh = jax.make_mesh((jax.device_count(),), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((jax.device_count(),), ("data",))
     eng = DistributedBFS(pg, mesh,
                          cfg=DistConfig(dispatch="bitmap", crossbar="flat"))
     lev = eng.run(root)

@@ -1,12 +1,16 @@
 from repro.core import bitmap
 from repro.core.bfs_local import (BFSResult, BFSRunner, LocalGraph,
+                                  MSBFSResult, MultiSourceBFSRunner,
                                   bfs_oracle, bfs_reference,
-                                  build_local_graph)
+                                  build_local_graph, count_traversed_edges,
+                                  msbfs_reference)
 from repro.core.partition import PartitionedGraph, partition_graph
 from repro.core.scheduler import PULL, PUSH, SchedulerConfig, choose_mode
 
 __all__ = [
-    "bitmap", "BFSResult", "BFSRunner", "LocalGraph", "bfs_oracle",
-    "bfs_reference", "build_local_graph", "PartitionedGraph",
+    "bitmap", "BFSResult", "BFSRunner", "LocalGraph", "MSBFSResult",
+    "MultiSourceBFSRunner", "bfs_oracle", "bfs_reference",
+    "build_local_graph", "count_traversed_edges", "msbfs_reference",
+    "PartitionedGraph",
     "partition_graph", "PULL", "PUSH", "SchedulerConfig", "choose_mode",
 ]

@@ -27,14 +27,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import axis_size, shard_map
 from repro.core import bitmap
 from repro.core.bfs_local import INF, compact_indices, expand_edges
 from repro.core.dispatcher import (or_reduce_scatter_flat,
                                    or_reduce_scatter_staged, queue_dispatch,
                                    received_to_local_bits)
-from repro.core.partition import PartitionedGraph, unreindex
+from repro.core.partition import PartitionedGraph, reindex, unreindex
 from repro.core.scheduler import PULL, PUSH, SchedulerConfig, choose_mode
 
 
@@ -270,8 +270,115 @@ class DistributedBFS:
             in_specs=(sp, sp, sp, P(), sp, sp),
             out_specs=(sp, sp, sp, P(), P())))
 
-    def _get(self, kind: str, budget: int):
-        key = (kind, budget)
+    # -- batched multi-source steps (one bit-plane per source) ------------
+    # State: frontier/seen uint32[q, vl, nwb] (source-mask words per local
+    # vertex), level int32[q, vl, B].  Dispatch is always bitmap-mode: the
+    # crossbar payload is the packed source-mask plane set and combining
+    # stays a bitwise OR, so the same OR-reduce-scatter delivers a whole
+    # batch per exchange (the "more concurrent work per memory pass" lever).
+
+    def _stats_batch_fn(self, nb: int):
+        axes = self.axes
+
+        def stats_b(frontier, seen, out_indptr, in_indptr):
+            pmask = bitmap.plane_mask(nb)
+            any_f = bitmap.any_rows(frontier)              # [k, vl]
+            un_any = bitmap.any_rows(~seen & pmask)
+            odeg = jnp.diff(out_indptr, axis=1)
+            ideg = jnp.diff(in_indptr, axis=1)
+            n_f = jax.lax.psum(jnp.sum(any_f, dtype=jnp.int32), axes)
+            m_f = jax.lax.psum(jnp.sum(jnp.where(any_f, odeg, 0),
+                                       dtype=jnp.int32), axes)
+            m_u = jax.lax.psum(jnp.sum(jnp.where(un_any, ideg, 0),
+                                       dtype=jnp.int32), axes)
+            n_u = jax.lax.psum(jnp.sum(un_any, dtype=jnp.int32), axes)
+            return n_f, m_f, m_u, n_u
+
+        sp = self._specs()
+        return jax.jit(shard_map(
+            stats_b, mesh=self.mesh,
+            in_specs=(sp, sp, sp, sp),
+            out_specs=(P(), P(), P(), P())))
+
+    def _push_batch_fn(self, budget: int, nb: int):
+        cfg, axes, sizes = self.cfg, self.axes, self.axis_sizes
+        vl, n_pad = self.vl, self.n_pad
+        d, k = self.d, self.k
+        nwb = bitmap.num_words(nb)
+
+        def push_b(frontier, seen, level, lvl, out_indptr, out_indices):
+            fmask = bitmap.unpack_rows(frontier)           # [k, vl, B']
+            any_f = bitmap.any_rows(frontier)
+            active = jax.vmap(lambda m: compact_indices(m, vl)[0])(any_f)
+            src, nbr, valid, total = jax.vmap(
+                lambda a, ip, ix: expand_edges(a, ip, ix, budget))(
+                active, out_indptr, out_indices)           # [k, budget]
+            overflow = jax.lax.psum(
+                jnp.any(total > budget).astype(jnp.int32), axes)
+            msg = jax.vmap(
+                lambda fm, s, v: fm[jnp.maximum(s, 0)] & v[:, None])(
+                fmask, src, valid)                         # [k, budget, B']
+            tgt = jnp.where(valid, nbr, n_pad).reshape(-1)
+            cand = jnp.zeros((n_pad + 1, fmask.shape[-1]), jnp.bool_)
+            cand = cand.at[tgt].max(msg.reshape(-1, fmask.shape[-1]),
+                                    mode="drop")[:-1]
+            cand_w = bitmap.pack_rows(cand).reshape(-1)    # [n_pad * nwb]
+            if cfg.crossbar == "staged":
+                cand_dev = or_reduce_scatter_staged(cand_w, axes, sizes)
+            else:
+                cand_dev = or_reduce_scatter_flat(cand_w, axes, d)
+            cand_local = cand_dev.reshape(k, vl, nwb)
+            new = cand_local & ~seen
+            s2 = seen | new
+            new_mask = bitmap.unpack_rows(new, nb)
+            lev2 = jnp.where(new_mask, lvl + 1, level)
+            return (new, s2, lev2, overflow,
+                    jax.lax.psum(jnp.sum(total), axes))
+
+        sp = self._specs()
+        return jax.jit(shard_map(
+            push_b, mesh=self.mesh,
+            in_specs=(sp, sp, sp, P(), sp, sp),
+            out_specs=(sp, sp, sp, P(), P())))
+
+    def _pull_batch_fn(self, budget: int, nb: int):
+        axes, vl, nwb = self.axes, self.vl, bitmap.num_words(nb)
+
+        def pull_b(frontier, seen, level, lvl, in_indptr, in_indices):
+            # all-gather the packed source planes of every vertex: the pull
+            # mode's "read current_frontier of remote parents", batched.
+            f_global = jax.lax.all_gather(frontier, axes,
+                                          tiled=True).reshape(-1, nwb)
+            pmask = bitmap.plane_mask(nb)
+            un_any = bitmap.any_rows(~seen & pmask)
+            unvisited = jax.vmap(lambda m: compact_indices(m, vl)[0])(un_any)
+            child, parent, valid, total = jax.vmap(
+                lambda a, ip, ix: expand_edges(a, ip, ix, budget))(
+                unvisited, in_indptr, in_indices)
+            overflow = jax.lax.psum(
+                jnp.any(total > budget).astype(jnp.int32), axes)
+            msg = bitmap.unpack_rows(
+                f_global[jnp.maximum(parent, 0)], nb) & valid[..., None]
+            cand = jax.vmap(
+                lambda t, m: jnp.zeros((vl + 1, nb), jnp.bool_)
+                .at[t].max(m, mode="drop")[:-1])(
+                jnp.where(valid, child, vl), msg)
+            cand_w = bitmap.pack_rows(cand)
+            new = cand_w & ~seen
+            s2 = seen | new
+            new_mask = bitmap.unpack_rows(new, nb)
+            lev2 = jnp.where(new_mask, lvl + 1, level)
+            return (new, s2, lev2, overflow,
+                    jax.lax.psum(jnp.sum(total), axes))
+
+        sp = self._specs()
+        return jax.jit(shard_map(
+            pull_b, mesh=self.mesh,
+            in_specs=(sp, sp, sp, P(), sp, sp),
+            out_specs=(sp, sp, sp, P(), P())))
+
+    def _get(self, kind: str, budget: int, nb: int = 0):
+        key = (kind, budget, nb)
         if key not in self._steps:
             if kind == "push":
                 self._steps[key] = self._push_fn(budget)
@@ -281,15 +388,36 @@ class DistributedBFS:
                 self._steps[key] = self._stats_fn()
             elif kind == "drain":
                 self._steps[key] = self._queue_drain_fn()
+            elif kind == "push_b":
+                self._steps[key] = self._push_batch_fn(budget, nb)
+            elif kind == "pull_b":
+                self._steps[key] = self._pull_batch_fn(budget, nb)
+            elif kind == "stats_b":
+                self._steps[key] = self._stats_batch_fn(nb)
         return self._steps[key]
+
+    def init_state_batch(self, roots_reindexed: np.ndarray):
+        s = self._sharding()
+        q, vl = self.q, self.vl
+        b = int(roots_reindexed.size)
+        nwb = bitmap.num_words(b)
+        frontier = np.zeros((q, vl, nwb), np.uint32)
+        level = np.full((q, vl, b), int(INF), np.int32)
+        for i, r in enumerate(np.asarray(roots_reindexed)):
+            shard, local = int(r) // vl, int(r) % vl
+            frontier[shard, local, i // 32] |= np.uint32(1) << (i % 32)
+            level[shard, local, i] = 0
+        return (jax.device_put(jnp.asarray(frontier), s),
+                jax.device_put(jnp.asarray(frontier), s),   # seen
+                jax.device_put(jnp.asarray(level), s))
 
     # -- driver -----------------------------------------------------------
     def run(self, root: int, max_iters: int | None = None):
         """BFS from original-ID ``root``; returns level int32[num_vertices]."""
         pg, cfg = self.pg, self.cfg
         if pg.scheme == "hash":
-            root_r = (root % pg.num_shards) * pg.verts_per_shard \
-                + root // pg.num_shards
+            root_r = int(reindex(np.asarray(root), pg.num_shards,
+                                 pg.verts_per_shard))
         else:
             root_r = root
         frontier, visited, level = self.init_state(root_r)
@@ -352,9 +480,79 @@ class DistributedBFS:
                                push_iters=push_iters, pull_iters=pull_iters)
         return out
 
+    def run_batch(self, roots, max_iters: int | None = None):
+        """Batched MS-BFS from original-ID ``roots``.
+
+        Returns level int32[B, num_vertices].  All B traversals run level-
+        synchronously over the same sharded graph; every CSR/CSC edge read
+        and every crossbar exchange carries the whole batch's source masks
+        (bitmap dispatch only — FIFO queues carry scalar vertex IDs and
+        would lose the sharing).
+        """
+        pg, cfg = self.pg, self.cfg
+        if cfg.dispatch != "bitmap":
+            raise NotImplementedError(
+                "run_batch supports bitmap dispatch only: FIFO queues carry "
+                "scalar vertex IDs, not per-source masks")
+        roots = np.asarray(roots, np.int64)
+        assert roots.ndim == 1 and roots.size >= 1
+        b = int(roots.size)
+        if pg.scheme == "hash":
+            roots_r = reindex(roots, pg.num_shards, pg.verts_per_shard)
+        else:
+            roots_r = roots
+        frontier, seen, level = self.init_state_batch(roots_r)
+        stats = self._get("stats_b", 0, b)
+        budget = cfg.edge_budget
+        lvl = jnp.int32(0)
+        mode = jnp.int32(PUSH)
+        iters = 0
+        inspected = 0
+        push_iters = pull_iters = 0
+        max_iters = max_iters or self.n_pad
+        while iters < max_iters:
+            n_f, m_f, m_u, n_u = stats(frontier, seen, self.out_indptr,
+                                       self.in_indptr)
+            if int(n_f) == 0:
+                break
+            mode = choose_mode(cfg.scheduler, mode, n_f, m_f, m_u,
+                               pg.num_vertices, n_u)
+            is_push = int(mode) == PUSH
+            need = int(m_f) if is_push else int(m_u)
+            while budget * self.k < need:
+                budget *= 2
+            while True:
+                kind = "push_b" if is_push else "pull_b"
+                arrays = ((self.out_indptr, self.out_indices) if is_push
+                          else (self.in_indptr, self.in_indices))
+                (frontier2, seen2, level2, overflow,
+                 total) = self._get(kind, budget, b)(
+                    frontier, seen, level, lvl, *arrays)
+                if int(overflow) == 0:
+                    break
+                budget *= 2            # HBM-reader queue deepening, retry
+            frontier, seen, level = frontier2, seen2, level2
+            inspected += int(total)
+            if is_push:
+                push_iters += 1
+            else:
+                pull_iters += 1
+            lvl = lvl + 1
+            iters += 1
+        lev = np.asarray(level).reshape(-1, b)        # [q*vl, B] reindexed
+        g = np.arange(self.n_pad)
+        orig = (unreindex(g, self.q, self.vl) if pg.scheme == "hash" else g)
+        out = np.full((b, pg.num_vertices), int(INF), np.int64)
+        ok = orig < pg.num_vertices
+        out[:, orig[ok]] = lev[ok].T
+        self.last_stats = dict(iterations=iters, edges_inspected=inspected,
+                               push_iters=push_iters, pull_iters=pull_iters,
+                               batch=b)
+        return out
+
 
 def _flat_axis_index(axes: tuple[str, ...]) -> jax.Array:
     idx = jax.lax.axis_index(axes[0])
     for a in axes[1:]:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
     return idx

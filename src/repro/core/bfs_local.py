@@ -244,11 +244,14 @@ class BFSRunner:
             need = int(m_f) if int(mode) == PUSH else int(m_u)
             while budget < min(need, g.out_indices.shape[0] + 1):
                 budget *= 2
-            new, visited, total, overflow = step(g, frontier, visited, budget,
+            # retry from the PRE-step visited: an overflowed (truncated)
+            # step may have committed a partial discovery set
+            vis0 = visited
+            new, visited, total, overflow = step(g, frontier, vis0, budget,
                                                  self.use_pallas)
             while bool(overflow):   # HBM-reader queue overflow: deepen, retry
                 budget *= 2
-                new, visited, total, overflow = step(g, frontier, visited,
+                new, visited, total, overflow = step(g, frontier, vis0,
                                                      budget, self.use_pallas)
             new_mask = bitmap.unpack(new, g.n_pad)
             level = jnp.where(new_mask, lvl + 1, level)
@@ -265,11 +268,225 @@ class BFSRunner:
         # GTEPS metric per paper §VI-A: sum of outgoing neighbor-list lengths
         # of all visited vertices; each edge counted once.
         out_deg = np.asarray(jnp.diff(g.out_indptr))[: g.n]
-        traversed = int(out_deg[level_np < int(INF)].sum())
+        traversed = count_traversed_edges(out_deg, level_np)
         return BFSResult(level=level_np, iterations=lvl,
                          edges_inspected=inspected, push_iters=push_iters,
                          pull_iters=pull_iters, traversed_edges=traversed,
                          seconds=dt)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-source BFS (MS-BFS): B concurrent traversals over one graph.
+#
+# Frontier/seen state is a per-vertex SOURCE mask — bit b of row v says
+# "source b has reached v" — packed into uint32[n_pad, ceil(B/32)] words
+# (bitmap.pack_rows).  Every CSR/CSC edge read is shared by the whole batch:
+# propagating along an edge is one 32/64-bit OR instead of B separate
+# traversals, the software analogue of keeping all HBM pseudo-channels busy
+# with concurrent queries (GraphScale; Then et al., VLDB'14).
+# ---------------------------------------------------------------------------
+
+def _ms_init(g: LocalGraph, roots: jax.Array):
+    b = roots.shape[0]
+    planes = jnp.zeros((g.n_pad, b), jnp.bool_)
+    planes = planes.at[roots, jnp.arange(b)].set(True)
+    frontier = bitmap.pack_rows(planes)
+    level = jnp.full((g.n_pad, b), INF, jnp.int32)
+    level = level.at[roots, jnp.arange(b)].set(0)
+    return frontier, frontier, level
+
+
+def _ms_dense_step(g: LocalGraph, frontier_w):
+    """One batched level expansion; returns candidate plane words."""
+    fmask = bitmap.unpack_rows(frontier_w)        # [n_pad, B]
+    msg = fmask[g.out_src]                        # [E, B] — shared edge read
+    cand = jnp.zeros((g.n_pad, fmask.shape[1]),
+                     jnp.bool_).at[g.out_indices].max(msg)
+    return bitmap.pack_rows(cand)
+
+
+def msbfs_reference(g: LocalGraph, roots, max_iters: int | None = None):
+    """Fully-jit dense MS-BFS loop.  Returns level int32[B, n]."""
+    roots = jnp.asarray(roots, jnp.int32)
+    max_iters = max_iters or g.n_pad
+    frontier0, seen0, level0 = _ms_init(g, roots)
+
+    def cond(state):
+        frontier, seen, level, lvl = state
+        return (bitmap.popcount(frontier) > 0) & (lvl < max_iters)
+
+    def body(state):
+        frontier, seen, level, lvl = state
+        cand = _ms_dense_step(g, frontier)
+        new = cand & ~seen
+        seen = seen | new
+        new_mask = bitmap.unpack_rows(new, roots.shape[0])
+        level = jnp.where(new_mask, lvl + 1, level)
+        return new, seen, level, lvl + 1
+
+    frontier, seen, level, lvl = jax.lax.while_loop(
+        cond, body, (frontier0, seen0, level0, jnp.int32(0)))
+    return level[: g.n].T
+
+
+def _p3_update_ms(cand_w, seen_w, use_pallas: bool):
+    """Batched P3: fused per-plane Pallas kernel or plain jnp."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        new_t, seen_t, _ = kops.fused_frontier_update_batch(
+            cand_w.T, seen_w.T)       # planes-major for the kernel grid
+        return new_t.T, seen_t.T
+    new = cand_w & ~seen_w
+    return new, seen_w | new
+
+
+@partial(jax.jit, static_argnames=("budget", "use_pallas"))
+def ms_push_step(g: LocalGraph, frontier_w, seen_w, budget: int,
+                 use_pallas: bool = False):
+    """Batched push: expand out-lists of any-source frontier vertices; each
+    gathered edge carries the full source mask of its endpoint."""
+    nb = frontier_w.shape[1] * bitmap.WORD_BITS
+    fmask = bitmap.unpack_rows(frontier_w)            # [n_pad, B']
+    any_f = bitmap.any_rows(frontier_w)
+    active, _ = compact_indices(any_f, g.n_pad)
+    src, nbr, valid, total = expand_edges(active, g.out_indptr,
+                                          g.out_indices, budget)
+    msg = fmask[jnp.maximum(src, 0)] & valid[:, None]  # [budget, B']
+    tgt = jnp.where(valid, nbr, g.n_pad)
+    cand = jnp.zeros((g.n_pad + 1, nb), jnp.bool_)
+    cand = cand.at[tgt].max(msg, mode="drop")[:-1]
+    cand_w = bitmap.pack_rows(cand)
+    new, seen2 = _p3_update_ms(cand_w, seen_w, use_pallas)
+    return new, seen2, total, total > budget
+
+
+@partial(jax.jit, static_argnames=("budget", "use_pallas"))
+def ms_pull_step(g: LocalGraph, frontier_w, seen_w, budget: int,
+                 use_pallas: bool = False):
+    """Batched pull: vertices unseen by SOME source read their in-lists once
+    and OR their parents' frontier masks."""
+    nb = frontier_w.shape[1] * bitmap.WORD_BITS
+    pmask = bitmap.plane_mask(nb)
+    fmask = bitmap.unpack_rows(frontier_w)
+    un_any = bitmap.any_rows(~seen_w & pmask)
+    active, _ = compact_indices(un_any, g.n_pad)
+    child, parent, valid, total = expand_edges(active, g.in_indptr,
+                                               g.in_indices, budget)
+    msg = fmask[jnp.maximum(parent, 0)] & valid[:, None]
+    tgt = jnp.where(valid, child, g.n_pad)
+    cand = jnp.zeros((g.n_pad + 1, nb), jnp.bool_)
+    cand = cand.at[tgt].max(msg, mode="drop")[:-1]
+    cand_w = bitmap.pack_rows(cand)
+    new, seen2 = _p3_update_ms(cand_w, seen_w, use_pallas)
+    return new, seen2, total, total > budget
+
+
+@jax.jit
+def _ms_iter_stats(g: LocalGraph, frontier_w, seen_w):
+    nb = frontier_w.shape[1] * bitmap.WORD_BITS
+    pmask = bitmap.plane_mask(nb)
+    any_f = bitmap.any_rows(frontier_w)
+    un_any = bitmap.any_rows(~seen_w & pmask)
+    n_f = jnp.sum(any_f, dtype=jnp.int32)
+    m_f = jnp.sum(jnp.where(any_f, g.out_deg, 0), dtype=jnp.int32)
+    m_u = jnp.sum(jnp.where(un_any, g.in_deg, 0), dtype=jnp.int32)
+    n_u = jnp.sum(un_any, dtype=jnp.int32)
+    return n_f, m_f, m_u, n_u
+
+
+@dataclasses.dataclass
+class MSBFSResult:
+    levels: np.ndarray          # int32[B, n] — one level row per source
+    batch: int
+    iterations: int
+    edges_inspected: int
+    push_iters: int
+    pull_iters: int
+    traversed_edges: int        # summed over all sources (paper §VI-A metric)
+    seconds: float
+
+    @property
+    def aggregate_teps(self) -> float:
+        return self.traversed_edges / max(self.seconds, 1e-12)
+
+    @property
+    def gteps(self) -> float:
+        return self.aggregate_teps / 1e9
+
+
+class MultiSourceBFSRunner:
+    """Python-driven hybrid MS-BFS over a batch of roots (query engine).
+
+    The per-iteration structure matches ``BFSRunner`` (stats -> mode ->
+    budgeted gather step -> P3) with all three bitmaps widened to one
+    bit-plane per source; direction choice uses any-source frontier /
+    any-source-unseen statistics.
+    """
+
+    def __init__(self, g: LocalGraph, sched: SchedulerConfig | None = None,
+                 init_budget: int = 1 << 15, use_pallas: bool = False):
+        self.g = g
+        self.sched = sched or SchedulerConfig()
+        self.init_budget = init_budget
+        self.use_pallas = use_pallas
+
+    def run(self, roots, time_it: bool = False) -> MSBFSResult:
+        g = self.g
+        roots = np.asarray(roots, np.int32)
+        assert roots.ndim == 1 and roots.size >= 1
+        assert (0 <= roots).all() and (roots < g.n).all(), roots
+        b = int(roots.size)
+        frontier, seen, level = _ms_init(g, jnp.asarray(roots))
+        mode = jnp.int32(PUSH)
+        lvl = 0
+        inspected = 0
+        push_iters = pull_iters = 0
+        budget = self.init_budget
+        t0 = time.perf_counter()
+        while True:
+            n_f, m_f, m_u, n_u = _ms_iter_stats(g, frontier, seen)
+            if int(n_f) == 0:
+                break
+            mode = choose_mode(self.sched, mode, n_f, m_f, m_u, g.n, n_u)
+            step = ms_push_step if int(mode) == PUSH else ms_pull_step
+            need = int(m_f) if int(mode) == PUSH else int(m_u)
+            while budget < min(need, g.out_indices.shape[0] + 1):
+                budget *= 2
+            # retry from the PRE-step seen: an overflowed (truncated) step
+            # may have committed a partial discovery set
+            seen0 = seen
+            new, seen, total, overflow = step(g, frontier, seen0, budget,
+                                              self.use_pallas)
+            while bool(overflow):   # HBM-reader queue overflow: deepen, retry
+                budget *= 2
+                new, seen, total, overflow = step(g, frontier, seen0, budget,
+                                                  self.use_pallas)
+            new_mask = bitmap.unpack_rows(new, b)
+            level = jnp.where(new_mask, lvl + 1, level)
+            frontier = new
+            lvl += 1
+            inspected += int(total)
+            if int(mode) == PUSH:
+                push_iters += 1
+            else:
+                pull_iters += 1
+        level.block_until_ready()
+        dt = time.perf_counter() - t0
+        levels = np.asarray(level[: g.n]).T        # [B, n]
+        out_deg = np.asarray(jnp.diff(g.out_indptr))[: g.n]
+        traversed = count_traversed_edges(out_deg, levels)
+        return MSBFSResult(levels=levels, batch=b, iterations=lvl,
+                           edges_inspected=inspected, push_iters=push_iters,
+                           pull_iters=pull_iters, traversed_edges=traversed,
+                           seconds=dt)
+
+
+def count_traversed_edges(out_deg: np.ndarray, levels: np.ndarray) -> int:
+    """Paper §VI-A GTEPS numerator: out-degrees of reached vertices, summed
+    over every source row of ``levels`` ([n] or [B, n])."""
+    levels = np.atleast_2d(levels)
+    return int(sum(out_deg[levels[i] < int(INF)].sum()
+                   for i in range(levels.shape[0])))
 
 
 def bfs_oracle(csr: CSRGraph, root: int) -> np.ndarray:

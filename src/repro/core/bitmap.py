@@ -90,3 +90,47 @@ def popcount(words: jax.Array) -> jax.Array:
 def np_unpack(words: np.ndarray, num_bits: int) -> np.ndarray:
     b = np.unpackbits(words.view(np.uint8), bitorder="little")
     return b[:num_bits].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# Batched (multi-source) bit-planes: one bit per BFS source, packed along the
+# LAST axis.  A `[n, B]` boolean plane-set packs to uint32[n, ceil(B/32)]:
+# element v holds the source-mask of vertex v, so a whole 32/64-root batch
+# rides on every CSR edge read (MS-BFS sharing; Then et al., VLDB'14).
+# ---------------------------------------------------------------------------
+
+def pack_rows(mask: jax.Array) -> jax.Array:
+    """bool[..., B] -> uint32[..., num_words(B)] (little-endian bit order)."""
+    nb = mask.shape[-1]
+    pad = (-nb) % WORD_BITS
+    widths = [(0, 0)] * (mask.ndim - 1) + [(0, pad)]
+    m = jnp.pad(mask, widths).reshape(
+        *mask.shape[:-1], -1, WORD_BITS).astype(jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(m << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_rows(words: jax.Array, num_bits: int | None = None) -> jax.Array:
+    """uint32[..., nw] -> bool[..., num_bits]."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(*words.shape[:-1], -1).astype(jnp.bool_)
+    return flat if num_bits is None else flat[..., :num_bits]
+
+
+def plane_mask(num_bits: int) -> jax.Array:
+    """uint32[num_words] with the first ``num_bits`` bits set — masks the
+    pad bits of the last source word (needed before complementing)."""
+    bits = jnp.arange(num_words(num_bits) * WORD_BITS) < num_bits
+    return pack(bits)
+
+
+def any_rows(words: jax.Array) -> jax.Array:
+    """bool[...]: does row v have any source bit set?"""
+    return jnp.any(words != 0, axis=-1)
+
+
+def popcount_rows(words: jax.Array) -> jax.Array:
+    """int32[...]: per-row popcount over the packed source words."""
+    return jnp.sum(jax.lax.population_count(words).astype(jnp.int32),
+                   axis=-1)

@@ -53,6 +53,9 @@ DATASETS = {
                            "com-Orkut stand-in: undirected, avg deg ~76.28"),
     "ho-like": DatasetSpec("ho-like", 15, 100, False,
                            "hollywood-2009 stand-in: undirected, avg deg ~99.91"),
+    # mid-size graphs for CPU-scale throughput benchmarks (MS-BFS batching)
+    "rmat14-8": DatasetSpec("rmat14-8", 14, 8, False),
+    "rmat16-16": DatasetSpec("rmat16-16", 16, 16, False),
     # tiny graphs for unit tests
     "tiny-16-4": DatasetSpec("tiny-16-4", 4, 4, False),
     "small-12-8": DatasetSpec("small-12-8", 12, 8, False),

@@ -40,6 +40,53 @@ def _kernel(cand_ref, vis_ref, nf_ref, vout_ref, cnt_ref):
         jax.lax.population_count(nf).astype(jnp.int32))
 
 
+def _kernel_batch(cand_ref, vis_ref, nf_ref, vout_ref, cnt_ref):
+    cand = cand_ref[...]
+    vis = vis_ref[...]
+    nf = cand & ~vis
+    nf_ref[...] = nf
+    vout_ref[...] = vis | nf
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        cnt_ref[0, 0, 0] = 0
+
+    cnt_ref[0, 0, 0] += jnp.sum(
+        jax.lax.population_count(nf).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def bitmap_update_batch(cand: jax.Array, visited: jax.Array,
+                        block_rows: int = 16, interpret: bool = True):
+    """Fused frontier update over a BATCH of bit-planes.
+
+    cand/visited: uint32[batch, rows, 128] — one plane per 32-source word of
+    an MS-BFS batch (or any stack of frontiers sharing a P3 pass).  The grid
+    walks (plane, row-tile); each plane's new-bit popcount accumulates into
+    its own counter, so the per-source-group discovery counts the Scheduler
+    wants ride along for free, exactly like the single-frontier kernel.
+
+    Returns (new_frontier, visited_out, new_counts[batch, 1, 1]).
+    """
+    b, rows, cols = cand.shape
+    assert cols == 128 and rows % block_rows == 0, (b, rows, cols)
+    grid = (b, rows // block_rows)
+    blk = pl.BlockSpec((1, block_rows, 128), lambda i, j: (i, j, 0))
+    return pl.pallas_call(
+        _kernel_batch,
+        grid=grid,
+        in_specs=[blk, blk],
+        out_specs=[blk, blk,
+                   pl.BlockSpec((1, 1, 1), lambda i, j: (i, 0, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, rows, 128), jnp.uint32),
+            jax.ShapeDtypeStruct((b, rows, 128), jnp.uint32),
+            jax.ShapeDtypeStruct((b, 1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cand, visited)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def bitmap_update(cand: jax.Array, visited: jax.Array,
                   block_rows: int = 16, interpret: bool = True):

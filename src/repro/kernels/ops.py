@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.bitmap_update import bitmap_update
+from repro.kernels.bitmap_update import bitmap_update, bitmap_update_batch
 from repro.kernels.csr_gather import gather_pages
 from repro.kernels.pull_spmv import pull_spmv_blocks
 
@@ -31,6 +31,23 @@ def fused_frontier_update(cand_words: jax.Array, visited_words: jax.Array):
     nf, vo, cnt = bitmap_update(c2, v2, block_rows=block_rows,
                                 interpret=INTERPRET)
     return (nf.reshape(-1)[:w], vo.reshape(-1)[:w], cnt[0, 0])
+
+
+def fused_frontier_update_batch(cand_words: jax.Array,
+                                visited_words: jax.Array):
+    """P3 update on a stack of planes: uint32[g, w] -> (new, visited,
+    counts[g]).  One fused pass per plane, per-plane popcounts riding
+    along (the MS-BFS per-source-word discovery counters)."""
+    g, w = cand_words.shape
+    rows = max((w + 127) // 128, 1)
+    pad = rows * 128 - w
+    c2 = jnp.pad(cand_words, ((0, 0), (0, pad))).reshape(g, rows, 128)
+    v2 = jnp.pad(visited_words, ((0, 0), (0, pad))).reshape(g, rows, 128)
+    block_rows = _largest_divisor(rows, 16)
+    nf, vo, cnt = bitmap_update_batch(c2, v2, block_rows=block_rows,
+                                      interpret=INTERPRET)
+    return (nf.reshape(g, -1)[:, :w], vo.reshape(g, -1)[:, :w],
+            cnt.reshape(g))
 
 
 def _largest_divisor(n: int, cap: int) -> int:

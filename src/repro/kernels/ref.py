@@ -13,6 +13,15 @@ def bitmap_update_ref(cand: jax.Array, visited: jax.Array):
     return nf, vout, cnt
 
 
+def bitmap_update_batch_ref(cand: jax.Array, visited: jax.Array):
+    """Oracle for kernels.bitmap_update.bitmap_update_batch."""
+    nf = cand & ~visited
+    vout = visited | nf
+    cnt = jnp.sum(jax.lax.population_count(nf).astype(jnp.int32),
+                  axis=(1, 2)).reshape(-1, 1, 1)
+    return nf, vout, cnt
+
+
 def gather_pages_ref(edges_paged: jax.Array, page_ids: jax.Array):
     """Oracle for kernels.csr_gather.gather_pages."""
     return edges_paged[page_ids]

@@ -4,10 +4,7 @@ from __future__ import annotations
 
 import jax
 
-
-def _make(shape, axes):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+from repro.compat import make_mesh as _make
 
 
 def make_production_mesh(*, multi_pod: bool = False):

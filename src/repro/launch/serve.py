@@ -1,11 +1,18 @@
-"""Batched serving driver: prefill a batch of prompts, then decode tokens.
+"""Batched serving drivers: LM decode, and batched BFS queries (MS-BFS).
 
-The decode loop is the same jitted ``serve_step`` the dry-run lowers at
-32k/500k KV lengths; here it runs for real on the host devices with a
-reduced config.
+LM path: prefill a batch of prompts, then decode tokens.  The decode loop
+is the same jitted ``serve_step`` the dry-run lowers at 32k/500k KV
+lengths; here it runs for real on the host devices with a reduced config.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --reduced \
       --batch 4 --prompt-len 16 --gen-tokens 24
+
+BFS path: answer a batch of BFS queries over a device-resident graph with
+one multi-source traversal (``bfs_batch``) — the serving analogue of the
+paper's "keep every memory channel busy" aggregate-GTEPS metric.
+
+  PYTHONPATH=src python -m repro.launch.serve --bfs-graph rmat16-16 \
+      --bfs-batch 32
 """
 from __future__ import annotations
 
@@ -75,16 +82,103 @@ def greedy_decode(arch: str, reduced: bool, batch: int, prompt_len: int,
     }
 
 
+def build_bfs_engine(graph: str, *, distributed: bool | None = None,
+                     pes_per_device: int = 2):
+    """Build a query engine with the graph resident on the host devices.
+
+    Returns (engine, out_degrees).  Single device -> the local
+    ``MultiSourceBFSRunner``; multi-device -> ``DistributedBFS`` (2 PEs
+    per PC by default, the paper's Table II shape).  The engine is meant
+    to be built once and reused across ``bfs_batch`` calls — the graph
+    arrays stay device-resident between queries.
+    """
+    from repro.core import MultiSourceBFSRunner, build_local_graph, \
+        partition_graph
+    from repro.graph import get_dataset
+
+    ds = get_dataset(graph)
+    deg = np.diff(ds.csr.indptr)
+    n_dev = jax.device_count()
+    if distributed is None:
+        distributed = n_dev > 1
+    if distributed:
+        from repro.compat import make_mesh
+        from repro.core.bfs_distributed import DistributedBFS
+        pg = partition_graph(ds.csr, ds.csc, n_dev * pes_per_device)
+        mesh = make_mesh((n_dev,), ("data",))
+        return DistributedBFS(pg, mesh), deg
+    return MultiSourceBFSRunner(build_local_graph(ds.csr, ds.csc)), deg
+
+
+def bfs_batch(roots, *, graph: str = "rmat16-16", engine=None,
+              out_deg=None) -> dict:
+    """Serve a batch of BFS queries in one multi-source traversal.
+
+    ``roots``: sequence of original vertex IDs, one query each.  Pass a
+    prebuilt ``engine`` (from :func:`build_bfs_engine`) to amortize graph
+    residency across calls; otherwise one is built for ``graph``.
+    Returns levels [B, |V|] plus aggregate serving stats.
+    """
+    from repro.core import count_traversed_edges
+    from repro.core.bfs_distributed import DistributedBFS
+
+    if engine is None:
+        engine, out_deg = build_bfs_engine(graph)
+    roots = np.asarray(roots, np.int64)
+    t0 = time.perf_counter()
+    if isinstance(engine, DistributedBFS):
+        levels = engine.run_batch(roots)
+        seconds = time.perf_counter() - t0      # traversal only, not stats
+        stats = dict(engine.last_stats)
+        traversed = (count_traversed_edges(out_deg, levels)
+                     if out_deg is not None else None)
+    else:
+        res = engine.run(roots)
+        seconds = time.perf_counter() - t0
+        levels = res.levels
+        stats = dict(iterations=res.iterations,
+                     edges_inspected=res.edges_inspected,
+                     push_iters=res.push_iters, pull_iters=res.pull_iters)
+        traversed = res.traversed_edges    # paper §VI-A metric
+    stats["batch"] = int(roots.size)
+    out = dict(levels=levels, seconds=round(seconds, 4), **stats)
+    if traversed is not None:
+        out["traversed_edges"] = traversed
+        out["aggregate_teps"] = round(traversed / max(seconds, 1e-12), 1)
+    return out
+
+
+def serve_bfs(graph: str, batch: int, seed: int = 0) -> dict:
+    engine, deg = build_bfs_engine(graph)
+    rng = np.random.default_rng(seed)
+    roots = rng.choice(np.flatnonzero(deg > 0), batch, replace=False)
+    bfs_batch(roots, engine=engine, out_deg=deg)        # warm-up / compile
+    out = bfs_batch(roots, engine=engine, out_deg=deg)
+    levels = out.pop("levels")
+    out.update(graph=graph,
+               reached_mean=float((levels < (1 << 30)).sum(1).mean()))
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-tokens", type=int, default=16)
+    ap.add_argument("--bfs-graph",
+                    help="serve batched BFS over this graph instead of LM")
+    ap.add_argument("--bfs-batch", type=int, default=32,
+                    help="number of concurrent BFS queries")
     args = ap.parse_args()
-    out = greedy_decode(args.arch, args.reduced, args.batch,
-                        args.prompt_len, args.gen_tokens)
+    if args.bfs_graph:
+        out = serve_bfs(args.bfs_graph, args.bfs_batch)
+    elif args.arch:
+        out = greedy_decode(args.arch, args.reduced, args.batch,
+                            args.prompt_len, args.gen_tokens)
+    else:
+        ap.error("one of --arch or --bfs-graph is required")
     print(json.dumps(out))
 
 

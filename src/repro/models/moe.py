@@ -137,8 +137,9 @@ def _moe_forward_ep(x: jax.Array, p: dict, mesh, *, top_k: int,
     over `model`; each model-rank routes the (locally visible) tokens to
     its own expert block and a single psum combines partial outputs.
     Collective cost: one [tb, s, d] all-reduce per MoE layer."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     axes = mesh.axis_names
     ep_axis = "model"
@@ -210,7 +211,8 @@ def moe_forward(x: jax.Array, p: dict, *, top_k: int,
                 dispatch: str = "gather") -> tuple[jax.Array, jax.Array]:
     """x: [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
     if dispatch == "ep":
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro import compat
+        mesh = compat.get_abstract_mesh()
         if _ep_applicable(mesh, x.shape[0], p["router"].shape[1]):
             return _moe_forward_ep(x, p, mesh, top_k=top_k,
                                    capacity_factor=capacity_factor,

@@ -4,8 +4,8 @@ XLA's sharding propagation is greedy: without hints it happily replicates
 the batch dim of a large intermediate (we caught it materializing global-
 batch SSD states in the mamba2 dry-run).  Model code therefore annotates
 activations with *logical* axis names; `constrain` maps them onto whatever
-mesh axes exist at trace time (ambient abstract mesh, set by the step
-builders via ``jax.set_mesh``) and skips any assignment that does not
+mesh axes exist at trace time (ambient mesh, set by the step builders via
+``repro.compat.use_mesh``) and skips any assignment that does not
 divide evenly.  Outside a mesh context it is a no-op, so unit tests on one
 device run the same code.
 """
@@ -15,6 +15,8 @@ import math
 
 import jax
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 # logical axis -> preferred mesh axes (first-fit with divisibility)
 RULES: dict[str | None, tuple[str, ...]] = {
@@ -66,19 +68,20 @@ def spec_for(shape: tuple[int, ...], logical: tuple[str | None, ...],
 
 def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
     """Annotate ``x``'s dims with logical axes; no-op without a mesh."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     spec = spec_for(x.shape, logical, mesh)
     if spec is None:
         return x
-    return jax.lax.with_sharding_constraint(x, spec)
+    return jax.lax.with_sharding_constraint(
+        x, compat.constraint_sharding(mesh, spec))
 
 
 def tp_size() -> int:
     """Size of the tensor-parallel ('model') axis at trace time (1 if no
     ambient mesh)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or "model" not in (mesh.axis_names or ()):
         return 1
     return int(mesh.shape["model"])

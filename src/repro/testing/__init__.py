@@ -1,0 +1,94 @@
+"""Optional-``hypothesis`` shim for the property-based tests.
+
+When hypothesis is installed, this module re-exports the real
+``given`` / ``settings`` / ``strategies``.  When it is not (the CI CPU
+image ships without it), a minimal deterministic fallback runs each
+property against ``max_examples`` seeded pseudo-random draws, so the
+property modules keep their full coverage instead of erroring at
+collection.
+
+Usage in tests::
+
+    from repro.testing import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import types
+    import zlib
+
+    class _Strategy:
+        """A draw function over a seeded ``random.Random``."""
+
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(lo: int, hi: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def _booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _floats(lo: float, hi: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def _sampled_from(seq) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    def _tuples(*strats: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+    def _lists(elem: _Strategy, min_size: int = 0,
+               max_size: int = 10) -> _Strategy:
+        return _Strategy(lambda rng: [
+            elem.draw(rng)
+            for _ in range(rng.randint(min_size, max_size))])
+
+    strategies = types.SimpleNamespace(
+        integers=_integers, booleans=_booleans, floats=_floats,
+        sampled_from=_sampled_from, tuples=_tuples, lists=_lists)
+
+    def settings(*, max_examples: int = 20, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats: _Strategy):
+        def deco(fn):
+            # the TRAILING params are the strategy slots (as in real
+            # hypothesis); any leading params stay pytest fixtures
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            strat_names = names[len(names) - len(strats):]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    draws = {nm: s.draw(rng)
+                             for nm, s in zip(strat_names, strats)}
+                    fn(*args, **kwargs, **draws)
+            # hide the strategy-filled params from pytest's fixture
+            # resolution
+            wrapper.__signature__ = sig.replace(
+                parameters=[p for nm, p in sig.parameters.items()
+                            if nm not in strat_names])
+            return wrapper
+        return deco
+
+
+st = strategies
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "strategies", "st"]

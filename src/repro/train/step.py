@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import use_mesh
 from repro.launch import shardings as sh
 from repro.models.config import ArchConfig
 from repro.models.transformer import loss_fn, prefill_step, serve_step
@@ -114,7 +115,7 @@ def build_train_step(cfg: ArchConfig, mesh, tcfg: TrainConfig | None = None,
 
     def wrapped(state, batch):
         # ambient mesh at trace time -> psharding.constrain hints apply
-        with jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+        with use_mesh(mesh):
             return train_step_fn(cfg, tcfg, state, batch)
 
     fn = jax.jit(
@@ -132,7 +133,7 @@ def build_prefill_step(cfg: ArchConfig, mesh, abstract_params=None,
     b_sh = (sh.batch_shardings(abstract_batch, mesh)
             if abstract_batch is not None else None)
     def wrapped(params, batch):
-        with jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+        with use_mesh(mesh):
             return prefill_step(params, cfg, batch)
 
     jfn = jax.jit(wrapped, in_shardings=(p_sh, b_sh))
@@ -151,7 +152,7 @@ def build_serve_step(cfg: ArchConfig, mesh, abstract_params=None,
     tok_sh = NamedSharding(mesh, sh.batch_pspec(tok_shape, dict(mesh.shape)))
 
     def fn(params, caches, tokens, pos):
-        with jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+        with use_mesh(mesh):
             return serve_step(params, cfg, caches, tokens, pos)
 
     jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, tok_sh, None),

@@ -1,7 +1,7 @@
 """System-behaviour tests: Algorithm 2 BFS vs the Algorithm 1 oracle."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, strategies as st
 
 from repro.core import (BFSRunner, SchedulerConfig, bfs_oracle,
                         bfs_reference, build_local_graph, partition_graph)

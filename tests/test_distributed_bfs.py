@@ -14,6 +14,7 @@ import numpy as np
 import jax
 import pytest
 
+from repro.compat import make_mesh
 from repro.core import bfs_oracle, partition_graph
 from repro.core.bfs_distributed import DistConfig, DistributedBFS
 from repro.graph import get_dataset
@@ -24,8 +25,7 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 def test_single_shard_mesh_matches_oracle():
     ds = get_dataset("tiny-16-4")
     pg = partition_graph(ds.csr, ds.csc, 1)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     eng = DistributedBFS(pg, mesh, cfg=DistConfig(dispatch="bitmap"))
     lev = eng.run(0)
     np.testing.assert_array_equal(lev, bfs_oracle(ds.csr, 0))
@@ -35,6 +35,7 @@ _SUBPROC = textwrap.dedent("""
     import os, json
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np, jax
+    from repro.compat import make_mesh
     from repro.graph import get_dataset
     from repro.core import bfs_oracle, partition_graph
     from repro.core.bfs_distributed import DistributedBFS, DistConfig
@@ -42,8 +43,7 @@ _SUBPROC = textwrap.dedent("""
 
     ds = get_dataset("small-12-8")
     pg = partition_graph(ds.csr, ds.csc, 8)
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     orc = bfs_oracle(ds.csr, 7)
     out = {}
     for dispatch, crossbar in [("bitmap", "staged"), ("bitmap", "flat"),
@@ -74,14 +74,14 @@ _SUBPROC_PES = textwrap.dedent("""
     import os, json
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np, jax
+    from repro.compat import make_mesh
     from repro.graph import get_dataset
     from repro.core import bfs_oracle, partition_graph
     from repro.core.bfs_distributed import DistributedBFS, DistConfig
 
     ds = get_dataset("small-12-8")
     orc = bfs_oracle(ds.csr, 7)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     out = {}
     # k PEs per PC (Fig. 10's scaling direction) x partition schemes
     for k in (1, 2, 4):

@@ -7,7 +7,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.bitmap_update import bitmap_update

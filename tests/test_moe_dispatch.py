@@ -64,9 +64,9 @@ _EP_SUBPROC = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, json
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import compat
     from repro.models import moe
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     d, f, e, k = 32, 64, 8, 2
     p = moe.moe_params(jax.random.key(0), d, f, e, jnp.float32)
     x = jax.random.normal(jax.random.key(1), (4, 24, d), jnp.float32)
@@ -78,7 +78,7 @@ _EP_SUBPROC = textwrap.dedent("""
         ps[n] = NamedSharding(mesh, P("model", None, None))
 
     def f_ep(x, p):
-        with jax.sharding.use_abstract_mesh(mesh.abstract_mesh):
+        with compat.use_mesh(mesh):
             return moe.moe_forward(x, p, top_k=k, chunk=16, dispatch="ep")
 
     y, a = jax.jit(f_ep, in_shardings=(xs, ps))(

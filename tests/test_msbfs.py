@@ -1,0 +1,184 @@
+"""Batched multi-source BFS (MS-BFS) vs a per-root oracle loop.
+
+Covers the batched bit-plane helpers, the batched P3 kernel, the local
+``MultiSourceBFSRunner`` (random + RMAT graphs, all scheduler policies),
+and the distributed ``run_batch`` path.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.compat import make_mesh
+from repro.core import (MultiSourceBFSRunner, SchedulerConfig, bfs_oracle,
+                        bitmap, build_local_graph, msbfs_reference,
+                        partition_graph)
+from repro.core.bfs_distributed import DistConfig, DistributedBFS
+from repro.graph import (csr_from_edges, get_dataset, rmat_edges,
+                         transpose_csr, uniform_edges)
+from repro.testing import given, settings, strategies as st
+
+
+def _graph_from_edges(src, dst, n):
+    csr = csr_from_edges(src, dst, n)
+    return csr, build_local_graph(csr, transpose_csr(csr))
+
+
+def _assert_matches_oracle(levels, csr, roots):
+    for i, r in enumerate(roots):
+        np.testing.assert_array_equal(levels[i].astype(np.int64),
+                                      bfs_oracle(csr, int(r)))
+
+
+# ---------------------------------------------------------------------------
+# bit-plane helpers + batched P3 kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nb", [1, 31, 32, 33, 64, 100])
+def test_pack_unpack_rows_roundtrip(nb):
+    rng = np.random.default_rng(nb)
+    mask = jnp.asarray(rng.random((57, nb)) < 0.3)
+    w = bitmap.pack_rows(mask)
+    assert w.shape == (57, bitmap.num_words(nb))
+    np.testing.assert_array_equal(
+        np.asarray(bitmap.unpack_rows(w, nb)), np.asarray(mask))
+    np.testing.assert_array_equal(
+        np.asarray(bitmap.any_rows(w)), np.asarray(mask).any(1))
+    np.testing.assert_array_equal(
+        np.asarray(bitmap.popcount_rows(w)), np.asarray(mask).sum(1))
+
+
+def test_plane_mask_covers_exactly_num_bits():
+    for nb in (1, 31, 32, 33, 64):
+        m = bitmap.plane_mask(nb)
+        np.testing.assert_array_equal(
+            np.asarray(bitmap.unpack(m)), np.arange(len(m) * 32) < nb)
+
+
+def test_bitmap_update_batch_matches_ref():
+    from repro.kernels.bitmap_update import bitmap_update_batch
+    from repro.kernels.ref import bitmap_update_batch_ref
+    rng = np.random.default_rng(7)
+    cand = jnp.asarray(rng.integers(0, 2**32, (3, 32, 128), dtype=np.uint32))
+    vis = jnp.asarray(rng.integers(0, 2**32, (3, 32, 128), dtype=np.uint32))
+    got = bitmap_update_batch(cand, vis, block_rows=16)
+    want = bitmap_update_batch_ref(cand, vis)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_fused_frontier_update_batch_odd_widths():
+    from repro.kernels import ops
+    rng = np.random.default_rng(11)
+    for w in (1, 100, 128, 1000):
+        c = jnp.asarray(rng.integers(0, 2**32, (5, w), dtype=np.uint32))
+        v = jnp.asarray(rng.integers(0, 2**32, (5, w), dtype=np.uint32))
+        nf, vo, cnt = ops.fused_frontier_update_batch(c, v)
+        np.testing.assert_array_equal(np.asarray(nf), np.asarray(c & ~v))
+        np.testing.assert_array_equal(np.asarray(vo),
+                                      np.asarray(v | (c & ~v)))
+        np.testing.assert_array_equal(
+            np.asarray(cnt), np.asarray(bitmap.popcount_rows(c & ~v)))
+
+
+# ---------------------------------------------------------------------------
+# local MS-BFS engine
+# ---------------------------------------------------------------------------
+
+def test_msbfs_reference_matches_oracle_loop():
+    src, dst = uniform_edges(256, 1024, seed=5)
+    csr, g = _graph_from_edges(src, dst, 256)
+    roots = np.arange(0, 40, 5, dtype=np.int32)
+    _assert_matches_oracle(np.asarray(msbfs_reference(g, roots)), csr, roots)
+
+
+def test_runner_matches_oracle_random_graph_32_roots():
+    """Acceptance: batch of >=32 roots == per-root oracle (random graph)."""
+    src, dst = uniform_edges(512, 4096, seed=2)
+    csr, g = _graph_from_edges(src, dst, 512)
+    roots = np.random.default_rng(0).choice(512, 34, replace=False)
+    res = MultiSourceBFSRunner(g).run(roots)
+    _assert_matches_oracle(res.levels, csr, roots)
+    assert res.batch == 34 and res.traversed_edges > 0
+
+
+def test_runner_matches_oracle_rmat_32_roots():
+    """Acceptance: batch of >=32 roots == per-root oracle (RMAT graph)."""
+    ds = get_dataset("small-12-8")
+    roots = np.random.default_rng(1).choice(ds.csr.num_vertices, 32,
+                                            replace=False)
+    res = MultiSourceBFSRunner(build_local_graph(ds.csr, ds.csc)).run(roots)
+    _assert_matches_oracle(res.levels, ds.csr, roots)
+    # sanity: MS-BFS inspected far fewer edges than 32 separate runs would
+    assert res.edges_inspected < 32 * ds.csr.num_edges
+
+
+@pytest.mark.parametrize("policy", ["push", "pull", "beamer", "paper"])
+def test_runner_all_policies(policy):
+    src, dst = rmat_edges(8, 8, seed=4)
+    csr, g = _graph_from_edges(src, dst, 256)
+    roots = np.asarray([0, 3, 17, 101, 255], np.int32)
+    res = MultiSourceBFSRunner(g, SchedulerConfig(policy=policy)).run(roots)
+    _assert_matches_oracle(res.levels, csr, roots)
+
+
+def test_runner_pallas_p3_path():
+    src, dst = rmat_edges(8, 6, seed=9)
+    csr, g = _graph_from_edges(src, dst, 256)
+    roots = np.asarray([1, 2, 3], np.int32)
+    res = MultiSourceBFSRunner(g, use_pallas=True).run(roots)
+    _assert_matches_oracle(res.levels, csr, roots)
+
+
+def test_runner_duplicate_and_single_roots():
+    src, dst = rmat_edges(7, 8, seed=12)
+    csr, g = _graph_from_edges(src, dst, 128)
+    res = MultiSourceBFSRunner(g).run(np.asarray([5, 5, 9], np.int32))
+    _assert_matches_oracle(res.levels, csr, [5, 5, 9])
+    res1 = MultiSourceBFSRunner(g).run(np.asarray([5], np.int32))
+    np.testing.assert_array_equal(res1.levels[0], res.levels[0])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6), st.integers(2, 5), st.integers(1, 40))
+def test_msbfs_property_random_graphs(seed, ef, batch):
+    """Property: MS-BFS levels == per-root oracle on random RMATs."""
+    src, dst = rmat_edges(7, ef, seed=seed)
+    csr, g = _graph_from_edges(src, dst, 128)
+    rng = np.random.default_rng(seed)
+    roots = rng.choice(128, batch, replace=False)
+    res = MultiSourceBFSRunner(g).run(roots)
+    _assert_matches_oracle(res.levels, csr, roots)
+
+
+# ---------------------------------------------------------------------------
+# distributed batched path + serving entry point
+# ---------------------------------------------------------------------------
+
+def test_distributed_run_batch_matches_oracle():
+    ds = get_dataset("tiny-16-4")
+    pg = partition_graph(ds.csr, ds.csc, 4)     # 4 PEs on 1 device
+    mesh = make_mesh((1,), ("data",))
+    eng = DistributedBFS(pg, mesh, cfg=DistConfig(dispatch="bitmap"))
+    roots = np.asarray([0, 1, 7, 9, 15])
+    levels = eng.run_batch(roots)
+    _assert_matches_oracle(levels, ds.csr, roots)
+    assert eng.last_stats["batch"] == 5
+
+
+def test_distributed_run_batch_matches_single_run():
+    ds = get_dataset("tiny-16-4")
+    pg = partition_graph(ds.csr, ds.csc, 2)
+    mesh = make_mesh((1,), ("data",))
+    eng = DistributedBFS(pg, mesh)
+    levels = eng.run_batch(np.asarray([3]))
+    np.testing.assert_array_equal(levels[0], eng.run(3))
+
+
+def test_serve_bfs_batch_entry():
+    from repro.launch.serve import bfs_batch, build_bfs_engine
+    engine, deg = build_bfs_engine("tiny-16-4", distributed=False)
+    roots = np.asarray([0, 2, 4, 6])
+    ds = get_dataset("tiny-16-4")
+    out = bfs_batch(roots, engine=engine, out_deg=deg)
+    _assert_matches_oracle(out["levels"], ds.csr, roots)
+    assert out["batch"] == 4 and out["aggregate_teps"] >= 0

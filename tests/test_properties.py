@@ -1,6 +1,5 @@
 """Property-based tests (hypothesis) on framework invariants."""
-import hypothesis
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
