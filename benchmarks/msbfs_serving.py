@@ -1,0 +1,130 @@
+"""Serving-mode MS-BFS benchmark: dynamic batching vs a static batch.
+
+The throughput story of the paper (and of GraphScale / the HBM benchmarking
+work in PAPERS.md) is about SUSTAINED utilization, not peak kernel speed:
+what matters for serving is whether a stream of independent single-root
+queries can be coalesced into full MS-BFS waves.  This benchmark drives the
+``launch.dynbatch`` scheduler with an open-loop Poisson load generator and
+compares against the static pre-batched upper bound:
+
+* ``static``  — the same total number of queries served as pre-packed
+  batch-``max_batch`` waves (the `msbfs_throughput` operating point).
+* ``dynamic`` — queries submitted one at a time at ``rate`` req/s through
+  ``DynamicBatcher``; the scheduler cuts a wave when 32 requests are
+  pending or the oldest has waited ``window`` seconds.  Reported latency
+  (p50/p99) is submit -> future-resolved, so it includes queueing.
+
+The structural claim: with an arrival rate high enough to fill waves, the
+coalesced stream's aggregate TEPS over busy time lands within ~10% of the
+static batch — dynamic batching recovers nearly all of the batch-32 win
+for traffic that never arrives batched.
+
+  PYTHONPATH=src python -m benchmarks.msbfs_serving
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import print_rows, save
+from repro.core import (MultiSourceBFSRunner, SchedulerConfig,
+                        build_local_graph, count_traversed_edges)
+from repro.graph import get_dataset
+from repro.launch.dynbatch import (DynamicBatcher, drive_open_loop,
+                                   plane_wave_sizes)
+
+
+def _percentiles(lats):
+    lats = np.asarray(lats, np.float64)
+    return dict(latency_mean=round(float(lats.mean()), 4),
+                latency_p50=round(float(np.percentile(lats, 50)), 4),
+                latency_p99=round(float(np.percentile(lats, 99)), 4))
+
+
+def run(graph: str = "rmat16-16", requests: int = 96, rate: float = 256.0,
+        window: float = 0.5, max_batch: int = 32, policy: str = "beamer",
+        seed: int = 0) -> dict:
+    ds = get_dataset(graph)
+    g = build_local_graph(ds.csr, ds.csc)
+    deg = np.diff(ds.csr.indptr)
+    rng = np.random.default_rng(seed)
+    roots = rng.choice(np.flatnonzero(deg > 0), requests,
+                       replace=True).astype(np.int64)
+    runner = MultiSourceBFSRunner(g, SchedulerConfig(policy=policy))
+    # warm-up / compile: the static waves run batch=max_batch shapes, the
+    # dynamic waves run plane-word-padded shapes — warm them all
+    runner.run(np.resize(roots, max_batch))
+    for m in plane_wave_sizes(max_batch):
+        if m != max_batch:
+            runner.run(np.resize(roots, m))
+
+    # -- static upper bound: pre-packed batch-`max_batch` waves ----------
+    # the last wave is padded to max_batch like the batcher pads to plane
+    # words, but latency and traversed-edge accounting cover only the
+    # `real` queries, matching the dynamic side's bookkeeping
+    static_lat, static_busy, static_traversed, static_waves = [], 0.0, 0, 0
+    for lo in range(0, requests, max_batch):
+        real = min(max_batch, requests - lo)
+        wave = np.resize(roots[lo:lo + max_batch], max_batch)
+        res = runner.run(wave)
+        static_waves += 1
+        static_busy += res.seconds
+        static_traversed += count_traversed_edges(deg, res.levels[:real])
+        # every query in a pre-packed batch waits the whole wave
+        static_lat += [res.seconds] * real
+    static = dict(mode="static", waves=static_waves,
+                  mean_batch=round(requests / static_waves, 2),
+                  busy_seconds=round(static_busy, 4),
+                  aggregate_teps=round(static_traversed
+                                       / max(static_busy, 1e-12), 1),
+                  **_percentiles(static_lat))
+
+    # -- dynamic: open-loop Poisson arrivals through the batcher ---------
+    batcher = DynamicBatcher(runner, out_deg=deg, window=window,
+                             max_batch=max_batch)
+    t0 = time.monotonic()
+    drive_open_loop(batcher, roots, rate=rate, rng=rng)
+    wall = time.monotonic() - t0
+    dyn_stats = batcher.stats()
+    dynamic = dict(mode="dynamic", waves=dyn_stats["waves"],
+                   mean_batch=dyn_stats["mean_batch"],
+                   busy_seconds=dyn_stats["busy_seconds"],
+                   aggregate_teps=dyn_stats["aggregate_teps"],
+                   latency_mean=dyn_stats["latency_mean"],
+                   latency_p50=dyn_stats["latency_p50"],
+                   latency_p99=dyn_stats["latency_p99"])
+
+    ratio = dynamic["aggregate_teps"] / max(static["aggregate_teps"], 1e-12)
+    return {"graph": graph, "requests": requests, "rate": rate,
+            "window": window, "max_batch": max_batch, "policy": policy,
+            "wall_seconds": round(wall, 4),
+            "rows": [static, dynamic],
+            "teps_ratio_dynamic_vs_static": round(ratio, 4),
+            "within_10pct": bool(ratio >= 0.9)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="rmat16-16")
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--rate", type=float, default=256.0,
+                    help="open-loop Poisson arrival rate, req/s")
+    ap.add_argument("--window", type=float, default=0.5,
+                    help="coalescing window, seconds")
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--policy", default="beamer")
+    args = ap.parse_args()
+    out = run(graph=args.graph, requests=args.requests, rate=args.rate,
+              window=args.window, max_batch=args.max_batch,
+              policy=args.policy)
+    save("msbfs_serving", out)
+    print_rows("msbfs_serving", out["rows"])
+    print(f"  dynamic/static aggregate TEPS: "
+          f"{out['teps_ratio_dynamic_vs_static']} "
+          f"(within 10%: {out['within_10pct']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,14 +3,15 @@ from repro.core.bfs_local import (BFSResult, BFSRunner, LocalGraph,
                                   MSBFSResult, MultiSourceBFSRunner,
                                   bfs_oracle, bfs_reference,
                                   build_local_graph, count_traversed_edges,
-                                  msbfs_reference)
+                                  engine_num_vertices, msbfs_reference,
+                                  validate_roots)
 from repro.core.partition import PartitionedGraph, partition_graph
 from repro.core.scheduler import PULL, PUSH, SchedulerConfig, choose_mode
 
 __all__ = [
     "bitmap", "BFSResult", "BFSRunner", "LocalGraph", "MSBFSResult",
     "MultiSourceBFSRunner", "bfs_oracle", "bfs_reference",
-    "build_local_graph", "count_traversed_edges", "msbfs_reference",
-    "PartitionedGraph",
+    "build_local_graph", "count_traversed_edges", "engine_num_vertices",
+    "msbfs_reference", "validate_roots", "PartitionedGraph",
     "partition_graph", "PULL", "PUSH", "SchedulerConfig", "choose_mode",
 ]

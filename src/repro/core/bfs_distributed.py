@@ -30,7 +30,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import axis_size, shard_map
 from repro.core import bitmap
-from repro.core.bfs_local import INF, compact_indices, expand_edges
+from repro.core.bfs_local import (INF, compact_indices, expand_edges,
+                                  validate_roots)
 from repro.core.dispatcher import (or_reduce_scatter_flat,
                                    or_reduce_scatter_staged, queue_dispatch,
                                    received_to_local_bits)
@@ -494,8 +495,10 @@ class DistributedBFS:
             raise NotImplementedError(
                 "run_batch supports bitmap dispatch only: FIFO queues carry "
                 "scalar vertex IDs, not per-source masks")
-        roots = np.asarray(roots, np.int64)
-        assert roots.ndim == 1 and roots.size >= 1
+        # validate BEFORE the int64 cast (a float root must error, not
+        # truncate); duplicates are allowed — one plane slot each
+        roots = validate_roots(np.asarray(roots),
+                               pg.num_vertices).astype(np.int64)
         b = int(roots.size)
         if pg.scheme == "hash":
             roots_r = reindex(roots, pg.num_shards, pg.verts_per_shard)

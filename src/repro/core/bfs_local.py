@@ -432,9 +432,8 @@ class MultiSourceBFSRunner:
 
     def run(self, roots, time_it: bool = False) -> MSBFSResult:
         g = self.g
-        roots = np.asarray(roots, np.int32)
-        assert roots.ndim == 1 and roots.size >= 1
-        assert (0 <= roots).all() and (roots < g.n).all(), roots
+        # validate BEFORE the int32 cast: a >= 2**31 root must error, not wrap
+        roots = validate_roots(np.asarray(roots), g.n).astype(np.int32)
         b = int(roots.size)
         frontier, seen, level = _ms_init(g, jnp.asarray(roots))
         mode = jnp.int32(PUSH)
@@ -479,6 +478,44 @@ class MultiSourceBFSRunner:
                            edges_inspected=inspected, push_iters=push_iters,
                            pull_iters=pull_iters, traversed_edges=traversed,
                            seconds=dt)
+
+
+def validate_roots(roots: np.ndarray, num_vertices: int) -> np.ndarray:
+    """Reject malformed MS-BFS root batches with a ``ValueError``.
+
+    A negative or >= |V| root would otherwise scatter silently out of
+    bounds (JAX clips/drops out-of-range indices), yielding a wrong answer
+    instead of an error.  Duplicate roots ARE allowed — each occupies its
+    own bit-plane slot and resolves independently.
+    """
+    roots = np.asarray(roots)
+    if roots.ndim != 1 or roots.size == 0:
+        raise ValueError(
+            f"roots must be a non-empty 1-D array, got shape {roots.shape}")
+    if not np.issubdtype(roots.dtype, np.integer):
+        # a float/bool root would pass the range check and then be
+        # silently truncated by the engine's integer cast
+        raise ValueError(f"roots must be integers, got dtype {roots.dtype}")
+    if ((roots < 0) | (roots >= num_vertices)).any():
+        bad = roots[(roots < 0) | (roots >= num_vertices)]
+        raise ValueError(
+            f"roots out of range [0, {num_vertices}): {bad.tolist()[:8]}")
+    return roots
+
+
+def engine_num_vertices(engine) -> int | None:
+    """|V| of the graph a BFS engine serves (duck-typed), or None.
+
+    Recognizes the local runners (``.g`` is a :class:`LocalGraph`) and the
+    distributed engine (``.pg`` is a ``PartitionedGraph``).
+    """
+    g = getattr(engine, "g", None)
+    if g is not None:
+        return int(g.n)
+    pg = getattr(engine, "pg", None)
+    if pg is not None:
+        return int(pg.num_vertices)
+    return None
 
 
 def count_traversed_edges(out_deg: np.ndarray, levels: np.ndarray) -> int:

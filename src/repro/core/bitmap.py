@@ -125,6 +125,36 @@ def plane_mask(num_bits: int) -> jax.Array:
     return pack(bits)
 
 
+def pad_plane_slots(roots: np.ndarray, fill: int | None = None,
+                    word_bits: int = WORD_BITS) -> tuple[np.ndarray, int]:
+    """Pad a 1-D slot array so its length fills whole uint32 plane words.
+
+    Dynamic-batching waves rarely arrive as an exact multiple of 32.  Each
+    slot is an independent bit-plane and duplicate roots are legal, so the
+    pad slots repeat ``fill`` (default: the first root); the packed word
+    count — and therefore every jitted MS-BFS step shape — stays constant
+    across wave sizes, keeping the compilation cache hot.  Returns
+    ``(padded_roots, original_length)``; undo with :func:`slice_plane_rows`.
+    """
+    roots = np.asarray(roots)
+    if roots.ndim != 1 or roots.size == 0:
+        raise ValueError(f"roots must be 1-D and non-empty, got shape "
+                         f"{roots.shape}")
+    b = int(roots.size)
+    pad = (-b) % word_bits
+    if pad == 0:
+        return roots, b
+    fill_v = roots[0] if fill is None else fill
+    return np.concatenate(
+        [roots, np.full(pad, fill_v, dtype=roots.dtype)]), b
+
+
+def slice_plane_rows(rows, b: int):
+    """Drop the pad slots of :func:`pad_plane_slots` from a per-slot result
+    (levels ``[B_padded, n]`` -> ``[b, n]``, or any leading-axis array)."""
+    return rows[:b]
+
+
 def any_rows(words: jax.Array) -> jax.Array:
     """bool[...]: does row v have any source bit set?"""
     return jnp.any(words != 0, axis=-1)

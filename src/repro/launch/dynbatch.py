@@ -1,0 +1,436 @@
+"""Asynchronous dynamic-batching driver for MS-BFS query serving.
+
+ScalaBFS earns its throughput by keeping all 32 HBM pseudo-channels busy
+with concurrent work; the software analogue is the MS-BFS engine, where one
+traversal of the device-resident graph answers a whole batch of queries
+(one bit-plane per source).  That engine only helps if queries actually
+arrive batched — a stream of independent single-root requests gets none of
+the ~21x batch-32 win.  This module closes that gap (the ROADMAP's
+"dynamic batching for ``bfs_batch`` serving" item):
+
+* ``DynamicBatcher.submit(root) -> BFSFuture`` enqueues one query and
+  returns immediately.
+* A wave scheduler coalesces every request that arrived within a
+  configurable ``window`` (or up to ``max_batch``, default 32 — one full
+  uint32 plane word) into a SINGLE MS-BFS wave: the roots are packed into
+  plane slots (padded to a whole word so jitted step shapes stay constant,
+  see ``bitmap.pad_plane_slots``), dispatched through ``run``/``run_batch``,
+  and each future resolves with its own level vector, its queue latency,
+  and the wave's aggregate-TEPS stats.
+* Time is injected (``clock=``): with the default ``time.monotonic`` a
+  daemon worker thread drives waves; with a fake clock the scheduler is a
+  deterministic, single-threaded state machine driven by ``pump()`` /
+  ``flush()`` — what the tests use.
+* Backpressure: the request queue is bounded (``max_pending``); ``submit``
+  blocks (threaded mode) or raises ``QueueFull``.  ``close(drain=True)``
+  flushes every pending request into final waves before shutting down.
+
+Works in front of both engines returned by ``launch.serve.build_bfs_engine``:
+the local ``MultiSourceBFSRunner`` and the sharded ``DistributedBFS``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core import (bitmap, count_traversed_edges, engine_num_vertices,
+                        validate_roots)
+
+
+class QueueFull(RuntimeError):
+    """Bounded request queue at capacity (backpressure signal)."""
+
+
+class BatcherClosed(RuntimeError):
+    """submit() after close() began, or result() of a cancelled request."""
+
+
+@dataclasses.dataclass
+class WaveStats:
+    """One dispatched MS-BFS wave (shared by every future it resolved)."""
+
+    wave_id: int
+    batch: int                  # real requests served
+    n_slots: int                # plane slots actually run (padded)
+    t_start: float              # injected-clock time the wave was cut
+    seconds: float              # service time (wall clock, traversal only)
+    iterations: int
+    edges_inspected: int
+    push_iters: int
+    pull_iters: int
+    traversed_edges: int | None  # paper §VI-A metric over the REAL requests
+    latencies: list[float] = dataclasses.field(default_factory=list)
+    error: str | None = None
+
+    @property
+    def aggregate_teps(self) -> float | None:
+        if self.traversed_edges is None:
+            return None
+        return self.traversed_edges / max(self.seconds, 1e-12)
+
+
+class BFSFuture:
+    """Handle for one submitted query; resolves when its wave completes."""
+
+    def __init__(self, root: int, t_submit: float):
+        self.root = int(root)
+        self.t_submit = float(t_submit)
+        self.wave: WaveStats | None = None
+        self.latency: float | None = None   # injected-clock submit->resolve
+        self._event = threading.Event()
+        self._levels = None
+        self._exc: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> np.ndarray:
+        """Level vector int64-compatible [|V|] for this root's traversal."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"BFS query for root {self.root} not served in {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._levels
+
+    def _resolve(self, levels, wave: WaveStats, latency: float):
+        self._levels = levels
+        self.wave = wave
+        self.latency = latency
+        self._event.set()
+
+    def _fail(self, exc: BaseException):
+        self._exc = exc
+        self._event.set()
+
+
+class DynamicBatcher:
+    """Coalesce single-root BFS queries into MS-BFS waves.
+
+    Wave-cut rule: a wave dispatches as soon as ``max_batch`` requests are
+    pending, or when the OLDEST pending request has waited ``window``
+    seconds, whichever comes first — so an idle stream pays at most one
+    window of queueing delay and a hot stream always runs full plane words.
+
+    ``clock=None`` (default) runs a daemon worker thread on real time.
+    Passing a callable clock disables the thread: the scheduler becomes a
+    deterministic state machine — advance the fake clock yourself and call
+    :meth:`pump` (one due wave) or :meth:`flush` (everything, deadlines
+    ignored).  ``start`` overrides the thread choice explicitly.
+    """
+
+    def __init__(self, engine, *, out_deg: np.ndarray | None = None,
+                 window: float = 0.02, max_batch: int = 32,
+                 max_pending: int = 1024, clock=None,
+                 pad_to_plane: bool = True, start: bool | None = None,
+                 stats_history: int = 4096):
+        if max_batch < 1 or max_pending < 1 or window < 0:
+            raise ValueError("need max_batch >= 1, max_pending >= 1, "
+                             "window >= 0")
+        self.engine = engine
+        self.window = float(window)
+        self.max_batch = int(max_batch)
+        self.max_pending = int(max_pending)
+        self.pad_to_plane = bool(pad_to_plane)
+        self.num_vertices = engine_num_vertices(engine)
+        if out_deg is None and getattr(engine, "g", None) is not None:
+            out_deg = np.asarray(engine.g.out_deg)[:engine.g.n]
+        self.out_deg = None if out_deg is None else np.asarray(out_deg)
+        self.clock = time.monotonic if clock is None else clock
+        # waves history is bounded: a long-running server must not grow
+        # without limit.  Percentiles cover the retained window; the
+        # counters below keep the totals exact forever.
+        self.waves: deque[WaveStats] = deque(maxlen=stats_history)
+        self._n_waves = self._n_errors = 0
+        self._n_requests = 0              # requests in error-free waves
+        self._busy_seconds = 0.0
+        self._traversed = 0
+        self._pending: deque[BFSFuture] = deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self._thread: threading.Thread | None = None
+        threaded = (clock is None) if start is None else bool(start)
+        if threaded:
+            self._thread = threading.Thread(
+                target=self._worker, name="dynbatch-worker", daemon=True)
+            self._thread.start()
+
+    # -- client side ------------------------------------------------------
+
+    def submit(self, root: int, *, block: bool = True,
+               timeout: float | None = None) -> BFSFuture:
+        """Enqueue one BFS query; returns a :class:`BFSFuture`.
+
+        Raises ``ValueError`` for an out-of-range root, ``QueueFull`` when
+        the bounded queue stays at capacity (immediately if ``block=False``
+        or no worker thread runs to drain it), ``BatcherClosed`` after
+        :meth:`close`.
+        """
+        if not isinstance(root, (int, np.integer)):
+            # reject rather than truncate, matching validate_roots
+            raise ValueError(
+                f"root must be an integer, got {type(root).__name__}")
+        root = int(root)
+        if self.num_vertices is not None:
+            validate_roots(np.asarray([root]), self.num_vertices)
+        with self._cond:
+            if self._closed:
+                raise BatcherClosed("submit() on a closed DynamicBatcher")
+            # backpressure: blocking waits only help when a worker thread
+            # is draining the queue concurrently
+            can_wait = block and self._thread is not None
+            deadline = (None if timeout is None
+                        else time.monotonic() + timeout)
+            while len(self._pending) >= self.max_pending:
+                if not can_wait:
+                    raise QueueFull(
+                        f"{len(self._pending)} requests pending "
+                        f"(max_pending={self.max_pending})")
+                wait = (None if deadline is None
+                        else deadline - time.monotonic())
+                if wait is not None and wait <= 0:
+                    raise QueueFull(
+                        f"queue still full after {timeout}s")
+                if not self._cond.wait(wait):
+                    raise QueueFull(f"queue still full after {timeout}s")
+                if self._closed:
+                    raise BatcherClosed(
+                        "submit() on a closed DynamicBatcher")
+            fut = BFSFuture(root, self.clock())
+            self._pending.append(fut)
+            self._cond.notify_all()
+        return fut
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close(drain=exc == (None, None, None))
+
+    # -- scheduler --------------------------------------------------------
+
+    def _deadline_locked(self) -> float | None:
+        if not self._pending:
+            return None
+        return self._pending[0].t_submit + self.window
+
+    def _cut_wave_locked(self) -> list[BFSFuture]:
+        wave = [self._pending.popleft()
+                for _ in range(min(self.max_batch, len(self._pending)))]
+        self._cond.notify_all()        # free queue capacity
+        return wave
+
+    def pump(self, force: bool = False) -> WaveStats | None:
+        """Dispatch at most one due wave (manual / fake-clock mode).
+
+        A wave is due when ``max_batch`` requests are pending or the oldest
+        has aged past ``window`` (``force=True`` ignores the deadline).
+        Returns its :class:`WaveStats`, or None if nothing was due.
+        """
+        with self._cond:
+            if not self._pending:
+                return None
+            due = (force or len(self._pending) >= self.max_batch
+                   or self.clock() >= self._deadline_locked())
+            if not due:
+                return None
+            wave = self._cut_wave_locked()
+        return self._dispatch(wave)
+
+    def flush(self) -> list[WaveStats]:
+        """Dispatch ALL pending requests now, deadlines ignored."""
+        out = []
+        while True:
+            w = self.pump(force=True)
+            if w is None:
+                return out
+            out.append(w)
+
+    def close(self, drain: bool = True, timeout: float | None = None):
+        """Stop accepting requests; serve (``drain=True``) or cancel what
+        is still queued.  Idempotent."""
+        with self._cond:
+            already = self._closed
+            self._closed = True
+            if not drain:
+                cancelled = list(self._pending)
+                self._pending.clear()
+            self._cond.notify_all()
+        if not drain:
+            for f in cancelled:
+                f._fail(BatcherClosed("request cancelled by close()"))
+        if self._thread is not None:
+            self._thread.join(timeout)
+            if self._thread.is_alive():   # keep the handle: not drained
+                raise TimeoutError(
+                    f"worker still draining after {timeout}s")
+            self._thread = None
+        elif drain and not already:
+            self.flush()
+
+    def _worker(self):
+        """Thread loop (real-clock mode): wait for the window deadline or a
+        full wave, dispatch, repeat; drains the queue on close."""
+        while True:
+            with self._cond:
+                while not self._pending and not self._closed:
+                    self._cond.wait()
+                if not self._pending:        # closed and drained
+                    return
+                now = self.clock()
+                deadline = self._deadline_locked()
+                if (len(self._pending) < self.max_batch
+                        and not self._closed and now < deadline):
+                    self._cond.wait(deadline - now)
+                    continue
+                wave = self._cut_wave_locked()
+            self._dispatch(wave)
+
+    # -- dispatch ---------------------------------------------------------
+
+    def _dispatch(self, futures: list[BFSFuture]) -> WaveStats:
+        roots = np.asarray([f.root for f in futures], np.int64)
+        b = len(futures)
+        slots = roots
+        if self.pad_to_plane:
+            slots, b = bitmap.pad_plane_slots(roots)
+        ws = WaveStats(wave_id=self._n_waves, batch=b,
+                       n_slots=int(slots.size), t_start=self.clock(),
+                       seconds=0.0, iterations=0, edges_inspected=0,
+                       push_iters=0, pull_iters=0, traversed_edges=None)
+        t0 = time.perf_counter()
+        try:
+            if hasattr(self.engine, "run_batch"):    # DistributedBFS
+                levels = np.asarray(self.engine.run_batch(slots))
+                ws.seconds = time.perf_counter() - t0
+                st = dict(getattr(self.engine, "last_stats", {}))
+                ws.iterations = int(st.get("iterations", 0))
+                ws.edges_inspected = int(st.get("edges_inspected", 0))
+                ws.push_iters = int(st.get("push_iters", 0))
+                ws.pull_iters = int(st.get("pull_iters", 0))
+            else:                                    # MultiSourceBFSRunner
+                res = self.engine.run(slots)
+                ws.seconds = time.perf_counter() - t0
+                levels = res.levels
+                ws.iterations = res.iterations
+                ws.edges_inspected = res.edges_inspected
+                ws.push_iters = res.push_iters
+                ws.pull_iters = res.pull_iters
+            levels = bitmap.slice_plane_rows(levels, b)
+            if self.out_deg is not None:
+                # recount over the REAL requests only: pad slots are
+                # duplicates and must not inflate the wave's TEPS
+                ws.traversed_edges = count_traversed_edges(self.out_deg,
+                                                           levels)
+        except Exception as exc:       # resolve, don't kill the worker
+            ws.seconds = time.perf_counter() - t0
+            ws.error = f"{type(exc).__name__}: {exc}"
+            self._record(ws)
+            if isinstance(exc, ValueError) and len(futures) > 1:
+                # a root rejected at dispatch time (possible when submit
+                # had no |V| to validate against) must not fail its
+                # co-batched neighbors: retry each request as its own wave
+                for f in futures:
+                    self._dispatch([f])
+                return ws
+            for f in futures:
+                f._fail(exc)
+            return ws
+        # finish the wave record BEFORE waking any waiter: a client whose
+        # result() just returned must see this wave in stats()
+        t_res = self.clock()
+        latencies = [t_res - f.t_submit for f in futures]
+        ws.latencies.extend(latencies)
+        self._record(ws)
+        for f, lv, lat in zip(futures, levels, latencies):
+            # copy the row: handing out a view would pin the whole padded
+            # [B, |V|] wave matrix for as long as any client keeps it
+            f._resolve(np.ascontiguousarray(lv), ws, lat)
+        return ws
+
+    def _record(self, ws: WaveStats):
+        with self._cond:
+            self.waves.append(ws)
+            self._n_waves += 1
+            if ws.error is not None:
+                self._n_errors += 1
+            else:
+                self._n_requests += ws.batch
+                self._busy_seconds += ws.seconds
+                self._traversed += ws.traversed_edges or 0
+
+    # -- reporting --------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Aggregate serving stats: exact totals over the batcher's whole
+        lifetime, latency percentiles over the last ``stats_history``
+        waves retained in ``self.waves``."""
+        with self._cond:               # consistent snapshot vs the worker
+            waves = list(self.waves)
+            n_waves, n_errors = self._n_waves, self._n_errors
+            n_req, busy = self._n_requests, self._busy_seconds
+            traversed = self._traversed
+        n_ok = n_waves - n_errors
+        lats = np.asarray([l for w in waves if w.error is None
+                           for l in w.latencies], np.float64)
+        out = dict(
+            waves=n_waves, errors=n_errors, requests=n_req,
+            mean_batch=round(n_req / n_ok, 2) if n_ok else 0.0,
+            busy_seconds=round(busy, 4),
+        )
+        if self.out_deg is not None:   # without degrees TEPS is unknowable
+            out.update(traversed_edges=int(traversed),
+                       aggregate_teps=round(traversed / max(busy, 1e-12),
+                                            1))
+        if lats.size:
+            out.update(
+                latency_mean=round(float(lats.mean()), 4),
+                latency_p50=round(float(np.percentile(lats, 50)), 4),
+                latency_p99=round(float(np.percentile(lats, 99)), 4),
+            )
+        return out
+
+
+def plane_wave_sizes(max_batch: int) -> list[int]:
+    """Every padded wave size a batcher with cap ``max_batch`` can run.
+
+    Partial waves pad to whole plane words (32, 64, ..., up to the padded
+    cap); warm these shapes before serving so no wave pays jit compilation
+    inside its measured service time.
+    """
+    padded = bitmap.num_words(max_batch) * bitmap.WORD_BITS
+    return list(range(bitmap.WORD_BITS, padded + 1, bitmap.WORD_BITS))
+
+
+def drive_open_loop(batcher: DynamicBatcher, roots, rate: float | None = None,
+                    rng: np.random.Generator | None = None
+                    ) -> list[BFSFuture]:
+    """Submit ``roots`` open-loop, drain the batcher, return the futures.
+
+    With ``rate`` (req/s) arrivals follow a Poisson process against an
+    ABSOLUTE schedule — sleeping a fresh exponential gap per request would
+    add the submit overhead on top of every gap and systematically
+    undershoot the requested rate.  ``rate=None`` submits back-to-back.
+    Raises the wave's error if any request failed.
+    """
+    roots = np.asarray(roots)
+    if rate:
+        rng = rng or np.random.default_rng(0)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, roots.size))
+    else:
+        arrivals = np.zeros(roots.size)
+    t0 = time.monotonic()
+    futures = []
+    for r, t_arr in zip(roots, arrivals):
+        delay = t_arr - (time.monotonic() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        futures.append(batcher.submit(int(r)))
+    batcher.close(drain=True)
+    for f in futures:
+        f.result(timeout=0)        # drained => resolved; surface errors
+    return futures

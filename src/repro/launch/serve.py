@@ -13,6 +13,14 @@ paper's "keep every memory channel busy" aggregate-GTEPS metric.
 
   PYTHONPATH=src python -m repro.launch.serve --bfs-graph rmat16-16 \
       --bfs-batch 32
+
+Async BFS path: stream SINGLE-root queries through the dynamic batcher
+(``repro.launch.dynbatch``), which coalesces everything arriving within a
+window into one MS-BFS wave and reports latency percentiles + aggregate
+TEPS.
+
+  PYTHONPATH=src python -m repro.launch.serve --bfs-graph rmat16-16 \
+      --bfs-serve-async --bfs-requests 64 --bfs-window 0.05 --bfs-rate 200
 """
 from __future__ import annotations
 
@@ -114,22 +122,29 @@ def bfs_batch(roots, *, graph: str = "rmat16-16", engine=None,
               out_deg=None) -> dict:
     """Serve a batch of BFS queries in one multi-source traversal.
 
-    ``roots``: sequence of original vertex IDs, one query each.  Pass a
-    prebuilt ``engine`` (from :func:`build_bfs_engine`) to amortize graph
-    residency across calls; otherwise one is built for ``graph``.
+    ``roots``: sequence of original vertex IDs, one query each.  Duplicate
+    roots are allowed (each occupies its own plane slot and resolves
+    independently); negative or >= |V| roots raise ``ValueError`` — they
+    would otherwise scatter silently out of bounds (both engines enforce
+    this via ``repro.core.validate_roots``).  Pass a prebuilt ``engine``
+    (from :func:`build_bfs_engine`) to amortize graph residency across
+    calls; otherwise one is built for ``graph``.
     Returns levels [B, |V|] plus aggregate serving stats.
     """
     from repro.core import count_traversed_edges
-    from repro.core.bfs_distributed import DistributedBFS
 
     if engine is None:
         engine, out_deg = build_bfs_engine(graph)
-    roots = np.asarray(roots, np.int64)
+    # no dtype cast here: the engine validates first (a float root must
+    # raise, not truncate)
+    roots = np.asarray(roots)
     t0 = time.perf_counter()
-    if isinstance(engine, DistributedBFS):
+    # duck-typed like launch.dynbatch._dispatch, so wrapper engines that
+    # forward run_batch work through both frontends
+    if hasattr(engine, "run_batch"):
         levels = engine.run_batch(roots)
         seconds = time.perf_counter() - t0      # traversal only, not stats
-        stats = dict(engine.last_stats)
+        stats = dict(getattr(engine, "last_stats", {}))
         traversed = (count_traversed_edges(out_deg, levels)
                      if out_deg is not None else None)
     else:
@@ -160,6 +175,33 @@ def serve_bfs(graph: str, batch: int, seed: int = 0) -> dict:
     return out
 
 
+def serve_bfs_async(graph: str, requests: int = 64, window: float = 0.05,
+                    max_batch: int = 32, rate: float | None = None,
+                    seed: int = 0) -> dict:
+    """Serve a stream of single-root queries through the dynamic batcher.
+
+    ``rate`` (req/s) spaces submissions with exponential inter-arrival
+    sleeps (open-loop Poisson); ``rate=None`` submits as fast as possible.
+    Returns the batcher's aggregate stats (waves, mean batch, latency
+    p50/p99, aggregate TEPS over busy time) as a JSON-friendly dict.
+    """
+    from repro.launch.dynbatch import (DynamicBatcher, drive_open_loop,
+                                       plane_wave_sizes)
+
+    engine, deg = build_bfs_engine(graph)
+    rng = np.random.default_rng(seed)
+    roots = rng.choice(np.flatnonzero(deg > 0), requests, replace=True)
+    for m in plane_wave_sizes(max_batch):      # warm-up / compile
+        bfs_batch(np.resize(roots, m), engine=engine, out_deg=deg)
+    batcher = DynamicBatcher(engine, out_deg=deg, window=window,
+                             max_batch=max_batch)
+    drive_open_loop(batcher, roots, rate=rate, rng=rng)
+    out = batcher.stats()
+    out.update(graph=graph, requests=requests, window=window,
+               max_batch=max_batch, rate=rate)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -171,8 +213,26 @@ def main():
                     help="serve batched BFS over this graph instead of LM")
     ap.add_argument("--bfs-batch", type=int, default=32,
                     help="number of concurrent BFS queries")
+    ap.add_argument("--bfs-serve-async", action="store_true",
+                    help="serve single-root queries through the dynamic "
+                         "batcher (launch.dynbatch) instead of one "
+                         "pre-batched call")
+    ap.add_argument("--bfs-window", type=float, default=0.05,
+                    help="coalescing window in seconds (async serving)")
+    ap.add_argument("--bfs-max-batch", type=int, default=32,
+                    help="wave size cap = plane slots per MS-BFS wave")
+    ap.add_argument("--bfs-requests", type=int, default=64,
+                    help="number of single-root queries to stream (async)")
+    ap.add_argument("--bfs-rate", type=float,
+                    help="open-loop Poisson arrival rate in req/s "
+                         "(default: submit as fast as possible)")
     args = ap.parse_args()
-    if args.bfs_graph:
+    if args.bfs_graph and args.bfs_serve_async:
+        out = serve_bfs_async(args.bfs_graph, requests=args.bfs_requests,
+                              window=args.bfs_window,
+                              max_batch=args.bfs_max_batch,
+                              rate=args.bfs_rate)
+    elif args.bfs_graph:
         out = serve_bfs(args.bfs_graph, args.bfs_batch)
     elif args.arch:
         out = greedy_decode(args.arch, args.reduced, args.batch,

@@ -1,0 +1,251 @@
+"""Dynamic-batching BFS serving driver (``repro.launch.dynbatch``).
+
+The scheduler is driven deterministically with an injected fake clock
+(no worker thread): N single-root submits inside one window must be
+served by exactly ONE MS-BFS wave whose futures all match ``bfs_oracle``.
+Also covers the max_batch cap, plane-slot padding, backpressure,
+drain/shutdown, root validation, the threaded real-clock mode, and the
+distributed engine behind the same frontend.
+"""
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.core import (MultiSourceBFSRunner, bfs_oracle, bitmap,
+                        build_local_graph, partition_graph)
+from repro.core.bfs_distributed import DistConfig, DistributedBFS
+from repro.graph import csr_from_edges, transpose_csr, uniform_edges
+from repro.launch.dynbatch import (BatcherClosed, DynamicBatcher, QueueFull,
+                                   engine_num_vertices)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += float(dt)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    src, dst = uniform_edges(256, 1024, seed=7)
+    csr = csr_from_edges(src, dst, 256)
+    return csr, build_local_graph(csr, transpose_csr(csr))
+
+
+@pytest.fixture()
+def engine(graph):
+    return MultiSourceBFSRunner(graph[1])
+
+
+# ---------------------------------------------------------------------------
+# plane-slot pad/slice helpers (core)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,padded", [(1, 32), (5, 32), (31, 32), (32, 32),
+                                      (33, 64), (48, 64), (64, 64)])
+def test_pad_plane_slots(b, padded):
+    roots = np.arange(1, b + 1, dtype=np.int64)
+    slots, orig = bitmap.pad_plane_slots(roots)
+    assert orig == b and slots.size == padded and slots.dtype == roots.dtype
+    np.testing.assert_array_equal(slots[:b], roots)
+    if padded > b:          # pad slots duplicate the first root
+        assert (slots[b:] == roots[0]).all()
+    rows = np.arange(padded * 3).reshape(padded, 3)
+    np.testing.assert_array_equal(bitmap.slice_plane_rows(rows, orig),
+                                  rows[:b])
+
+
+def test_pad_plane_slots_rejects_empty():
+    with pytest.raises(ValueError):
+        bitmap.pad_plane_slots(np.asarray([], np.int64))
+
+
+# ---------------------------------------------------------------------------
+# deterministic fake-clock scheduling
+# ---------------------------------------------------------------------------
+
+def test_one_window_is_exactly_one_wave_matching_oracle(graph, engine):
+    """Acceptance: N submits inside one window -> ONE MS-BFS wave; every
+    future's levels equal the per-root oracle."""
+    csr, _ = graph
+    clock = FakeClock()
+    b = DynamicBatcher(engine, window=0.01, max_batch=32, clock=clock)
+    roots = [0, 3, 17, 42, 199]
+    futures = []
+    for r in roots:
+        futures.append(b.submit(r, block=False))
+        clock.advance(0.001)            # arrivals spread inside the window
+    assert b.pump() is None             # window not elapsed -> nothing due
+    assert not any(f.done() for f in futures)
+    clock.advance(0.01)                 # oldest request now past the window
+    wave = b.pump()
+    assert wave is not None and b.pump() is None
+    assert len(b.waves) == 1 and wave.batch == len(roots)
+    assert wave.n_slots == 32           # padded to one full plane word
+    for f, r in zip(futures, roots):
+        assert f.done() and f.wave is wave
+        np.testing.assert_array_equal(np.asarray(f.result(), np.int64),
+                                      bfs_oracle(csr, r))
+    # latency is deterministic under the fake clock: submit -> wave cut
+    assert futures[0].latency == pytest.approx(0.015)
+    assert futures[-1].latency == pytest.approx(0.011)
+    s = b.stats()
+    assert s["waves"] == 1 and s["requests"] == 5
+    assert s["traversed_edges"] == wave.traversed_edges > 0
+
+
+def test_full_wave_dispatches_before_window(engine):
+    clock = FakeClock()
+    b = DynamicBatcher(engine, window=10.0, max_batch=4, clock=clock,
+                       pad_to_plane=False)
+    for r in range(7):
+        b.submit(r, block=False)
+    wave = b.pump()                     # cap reached: no deadline needed
+    assert wave.batch == 4 and wave.n_slots == 4
+    assert b.pump() is None             # 3 left, window wide open
+    waves = b.flush()
+    assert len(waves) == 1 and waves[0].batch == 3
+    assert [w.wave_id for w in b.waves] == [0, 1]
+
+
+def test_window_restarts_from_oldest_remaining(engine):
+    clock = FakeClock()
+    b = DynamicBatcher(engine, window=1.0, max_batch=2, clock=clock)
+    b.submit(1, block=False)
+    clock.advance(0.5)
+    b.submit(2, block=False)
+    b.submit(3, block=False)            # full wave of 2 is now due
+    assert b.pump().batch == 2
+    assert b.pump() is None             # root 3 aged only 0.0 of its window
+    clock.advance(0.99)
+    assert b.pump() is None             # 0.99 < 1.0: still waiting
+    clock.advance(0.02)
+    assert b.pump().batch == 1
+
+
+def test_backpressure_bounded_queue(engine):
+    b = DynamicBatcher(engine, window=1.0, max_pending=3, clock=FakeClock())
+    for r in range(3):
+        b.submit(r, block=False)
+    with pytest.raises(QueueFull):
+        b.submit(3, block=False)
+    # manual mode never drains concurrently: block=True must also raise
+    with pytest.raises(QueueFull):
+        b.submit(3)
+    b.flush()
+    b.submit(3, block=False)            # capacity freed by the wave cut
+    b.close(drain=True)
+
+
+def test_close_drains_or_cancels(graph, engine):
+    csr, _ = graph
+    b = DynamicBatcher(engine, window=5.0, clock=FakeClock())
+    f = b.submit(9, block=False)
+    b.close(drain=True)                 # flushes despite the open window
+    np.testing.assert_array_equal(np.asarray(f.result(timeout=0), np.int64),
+                                  bfs_oracle(csr, 9))
+    with pytest.raises(BatcherClosed):
+        b.submit(1, block=False)
+
+    b2 = DynamicBatcher(engine, window=5.0, clock=FakeClock())
+    f2 = b2.submit(9, block=False)
+    b2.close(drain=False)               # cancel instead of serving
+    assert f2.done()
+    with pytest.raises(BatcherClosed):
+        f2.result(timeout=0)
+    assert b2.stats()["waves"] == 0
+
+
+def test_submit_validates_roots(engine):
+    b = DynamicBatcher(engine, clock=FakeClock())
+    assert engine_num_vertices(engine) == 256
+    with pytest.raises(ValueError):
+        b.submit(-1, block=False)
+    with pytest.raises(ValueError):
+        b.submit(256, block=False)
+    with pytest.raises(ValueError, match="integer"):
+        b.submit(5.7, block=False)      # truncation would serve root 5
+    b.close()
+
+
+def test_duplicate_roots_resolve_independently(graph, engine):
+    csr, _ = graph
+    b = DynamicBatcher(engine, clock=FakeClock())
+    f1 = b.submit(5, block=False)
+    f2 = b.submit(5, block=False)
+    b.flush()
+    want = bfs_oracle(csr, 5)
+    for f in (f1, f2):
+        np.testing.assert_array_equal(np.asarray(f.result(), np.int64),
+                                      want)
+
+
+def test_wrapper_engine_bad_root_fails_only_its_future(graph, engine):
+    """An opaque wrapper engine (no .g/.pg) defeats submit-time validation;
+    a bad root rejected at dispatch must not fail its co-batched wave."""
+    csr, _ = graph
+
+    class Wrapper:
+        def __init__(self, inner):
+            self._inner = inner
+
+        def run_batch(self, roots):
+            return self._inner.run(np.asarray(roots)).levels
+
+    b = DynamicBatcher(Wrapper(engine), window=1.0, clock=FakeClock())
+    assert b.num_vertices is None and b.out_deg is None
+    good = b.submit(3, block=False)
+    bad = b.submit(999, block=False)       # accepted: |V| unknown here
+    good2 = b.submit(7, block=False)
+    b.flush()
+    with pytest.raises(ValueError):
+        bad.result(timeout=0)
+    for f, r in ((good, 3), (good2, 7)):
+        np.testing.assert_array_equal(np.asarray(f.result(), np.int64),
+                                      bfs_oracle(csr, r))
+    s = b.stats()
+    assert s["errors"] >= 1
+    assert "aggregate_teps" not in s       # no out_deg -> TEPS unknowable
+    b.close()
+
+
+# ---------------------------------------------------------------------------
+# threaded real-clock mode + distributed engine
+# ---------------------------------------------------------------------------
+
+def test_threaded_serving_matches_oracle(graph, engine):
+    csr, _ = graph
+    roots = [2, 50, 100, 150, 200, 250]
+    with DynamicBatcher(engine, window=0.05) as b:
+        futures = [b.submit(r) for r in roots]
+        levels = [f.result(timeout=120.0) for f in futures]
+    for lv, r in zip(levels, roots):
+        np.testing.assert_array_equal(np.asarray(lv, np.int64),
+                                      bfs_oracle(csr, r))
+    s = b.stats()
+    assert 1 <= s["waves"] <= len(roots) and s["requests"] == len(roots)
+    assert s["latency_p99"] >= s["latency_p50"] > 0
+
+
+def test_distributed_engine_behind_batcher():
+    src, dst = uniform_edges(64, 256, seed=3)
+    csr = csr_from_edges(src, dst, 64)
+    pg = partition_graph(csr, transpose_csr(csr), 4)
+    mesh = make_mesh((1,), ("data",))
+    eng = DistributedBFS(pg, mesh, cfg=DistConfig(dispatch="bitmap"))
+    deg = np.diff(csr.indptr)
+    b = DynamicBatcher(eng, out_deg=deg, window=0.01, clock=FakeClock())
+    roots = [0, 13, 63]
+    futures = [b.submit(r, block=False) for r in roots]
+    waves = b.flush()
+    assert len(waves) == 1 and waves[0].n_slots == 32
+    assert waves[0].traversed_edges > 0
+    for f, r in zip(futures, roots):
+        np.testing.assert_array_equal(np.asarray(f.result(), np.int64),
+                                      bfs_oracle(csr, r))
+    b.close()
