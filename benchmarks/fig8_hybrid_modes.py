@@ -33,7 +33,7 @@ def run(graphs=GRAPHS, repeats: int = 2) -> dict:
             runner = BFSRunner(g, SchedulerConfig(policy=policy))
             best = None
             for _ in range(repeats):
-                res = runner.run(root, time_it=True)
+                res = runner.run(root)
                 if best is None or res.seconds < best.seconds:
                     best = res
             assert np.array_equal(

@@ -33,7 +33,7 @@ def run(repeats: int = 2) -> dict:
         runner = BFSRunner(g, SchedulerConfig(policy="beamer"))
         best = None
         for _ in range(repeats):
-            res = runner.run(root, time_it=True)
+            res = runner.run(root)
             if best is None or res.seconds < best.seconds:
                 best = res
         len_nl = float(deg[deg > 0].mean())

@@ -30,8 +30,7 @@ def main():
 
     # -- 2. local hybrid BFS vs oracle -------------------------------------
     g = build_local_graph(ds.csr, ds.csc)
-    res = BFSRunner(g, SchedulerConfig(policy="beamer")).run(root,
-                                                             time_it=True)
+    res = BFSRunner(g, SchedulerConfig(policy="beamer")).run(root)
     oracle = bfs_oracle(ds.csr, root)
     assert np.array_equal(np.minimum(res.level, 1 << 30),
                           np.minimum(oracle, 1 << 30))

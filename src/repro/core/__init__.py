@@ -1,17 +1,20 @@
 from repro.core import bitmap
-from repro.core.bfs_local import (BFSResult, BFSRunner, LocalGraph,
-                                  MSBFSResult, MultiSourceBFSRunner,
-                                  bfs_oracle, bfs_reference,
-                                  build_local_graph, count_traversed_edges,
+from repro.core.bfs_local import (BFSEngine, BFSResult, BFSRunner,
+                                  LocalGraph, MSBFSResult,
+                                  MultiSourceBFSRunner, bfs_oracle,
+                                  bfs_reference, build_local_graph,
+                                  count_traversed_edges,
                                   engine_num_vertices, msbfs_reference,
                                   validate_roots)
 from repro.core.partition import PartitionedGraph, partition_graph
-from repro.core.scheduler import PULL, PUSH, SchedulerConfig, choose_mode
+from repro.core.scheduler import (PULL, PUSH, SchedulerConfig, choose_mode,
+                                  choose_mode_host)
 
 __all__ = [
-    "bitmap", "BFSResult", "BFSRunner", "LocalGraph", "MSBFSResult",
-    "MultiSourceBFSRunner", "bfs_oracle", "bfs_reference",
+    "bitmap", "BFSEngine", "BFSResult", "BFSRunner", "LocalGraph",
+    "MSBFSResult", "MultiSourceBFSRunner", "bfs_oracle", "bfs_reference",
     "build_local_graph", "count_traversed_edges", "engine_num_vertices",
     "msbfs_reference", "validate_roots", "PartitionedGraph",
     "partition_graph", "PULL", "PUSH", "SchedulerConfig", "choose_mode",
+    "choose_mode_host",
 ]

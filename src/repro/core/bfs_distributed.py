@@ -30,13 +30,15 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import axis_size, shard_map
 from repro.core import bitmap
-from repro.core.bfs_local import (INF, compact_indices, expand_edges,
-                                  validate_roots)
+from repro.core.bfs_local import (INF, SV_MF, SV_MU, SV_NF, SV_NU,
+                                  SV_OVERFLOW, SV_TOTAL, compact_indices,
+                                  expand_edges, validate_roots)
 from repro.core.dispatcher import (or_reduce_scatter_flat,
                                    or_reduce_scatter_staged, queue_dispatch,
                                    received_to_local_bits)
 from repro.core.partition import PartitionedGraph, reindex, unreindex
-from repro.core.scheduler import PULL, PUSH, SchedulerConfig, choose_mode
+from repro.core.scheduler import (PULL, PUSH, SchedulerConfig, choose_mode,
+                                  choose_mode_host)
 
 
 @dataclasses.dataclass
@@ -75,7 +77,16 @@ class DistributedBFS:
         self.out_indices = put(pg.out_indices)
         self.in_indptr = put(pg.in_indptr.astype(np.int32))
         self.in_indices = put(pg.in_indices)
+        # stored per-shard degrees: the per-level scheduler stats would
+        # otherwise re-derive them with jnp.diff every single iteration
+        self.out_deg = put(np.diff(pg.out_indptr, axis=1).astype(np.int32))
+        self.in_deg = put(np.diff(pg.in_indptr, axis=1).astype(np.int32))
         self._steps = {}
+
+    @property
+    def num_vertices(self) -> int:
+        """|V| served (the :class:`repro.core.BFSEngine` protocol)."""
+        return int(self.pg.num_vertices)
 
     @classmethod
     def abstract(cls, mesh: jax.sharding.Mesh, num_vertices: int,
@@ -277,29 +288,41 @@ class DistributedBFS:
     # crossbar payload is the packed source-mask plane set and combining
     # stays a bitwise OR, so the same OR-reduce-scatter delivers a whole
     # batch per exchange (the "more concurrent work per memory pass" lever).
+    #
+    # Packed-word invariant: P2 gathers the packed source-mask WORDS of
+    # each budgeted edge's endpoint and scatter-ORs them into the candidate
+    # plane words (bitmap._scatter_or_rows — the jnp twin of the Pallas
+    # msbfs_propagate kernel); plane state never unpacks between P1 and the
+    # level update.  Each step also returns the NEXT level's scheduler
+    # stats stacked into one replicated int32[7], so run_batch performs a
+    # single blocking device->host transfer per level.
+
+    def _ms_statvec_b(self, new, s2, odeg, ideg, total, overflow, nb: int):
+        axes = self.axes
+        pmask = bitmap.plane_mask(nb)
+        any_f = bitmap.any_rows(new)                   # [k, vl]
+        un_any = bitmap.any_rows(~s2 & pmask)
+        n_f = jax.lax.psum(jnp.sum(any_f, dtype=jnp.int32), axes)
+        m_f = jax.lax.psum(jnp.sum(jnp.where(any_f, odeg, 0),
+                                   dtype=jnp.int32), axes)
+        m_u = jax.lax.psum(jnp.sum(jnp.where(un_any, ideg, 0),
+                                   dtype=jnp.int32), axes)
+        n_u = jax.lax.psum(jnp.sum(un_any, dtype=jnp.int32), axes)
+        cnt = jax.lax.psum(bitmap.popcount(new), axes)
+        return jnp.stack([n_f, m_f, m_u, n_u,
+                          jnp.asarray(total, jnp.int32),
+                          jnp.asarray(overflow, jnp.int32), cnt])
 
     def _stats_batch_fn(self, nb: int):
-        axes = self.axes
-
-        def stats_b(frontier, seen, out_indptr, in_indptr):
-            pmask = bitmap.plane_mask(nb)
-            any_f = bitmap.any_rows(frontier)              # [k, vl]
-            un_any = bitmap.any_rows(~seen & pmask)
-            odeg = jnp.diff(out_indptr, axis=1)
-            ideg = jnp.diff(in_indptr, axis=1)
-            n_f = jax.lax.psum(jnp.sum(any_f, dtype=jnp.int32), axes)
-            m_f = jax.lax.psum(jnp.sum(jnp.where(any_f, odeg, 0),
-                                       dtype=jnp.int32), axes)
-            m_u = jax.lax.psum(jnp.sum(jnp.where(un_any, ideg, 0),
-                                       dtype=jnp.int32), axes)
-            n_u = jax.lax.psum(jnp.sum(un_any, dtype=jnp.int32), axes)
-            return n_f, m_f, m_u, n_u
+        def stats_b(frontier, seen, out_deg, in_deg):
+            return self._ms_statvec_b(frontier, seen, out_deg, in_deg,
+                                      0, 0, nb)
 
         sp = self._specs()
         return jax.jit(shard_map(
             stats_b, mesh=self.mesh,
             in_specs=(sp, sp, sp, sp),
-            out_specs=(P(), P(), P(), P())))
+            out_specs=P()))
 
     def _push_batch_fn(self, budget: int, nb: int):
         cfg, axes, sizes = self.cfg, self.axes, self.axis_sizes
@@ -307,23 +330,24 @@ class DistributedBFS:
         d, k = self.d, self.k
         nwb = bitmap.num_words(nb)
 
-        def push_b(frontier, seen, level, lvl, out_indptr, out_indices):
-            fmask = bitmap.unpack_rows(frontier)           # [k, vl, B']
-            any_f = bitmap.any_rows(frontier)
+        def push_b(frontier, seen, level, lvl, out_indptr, out_indices,
+                   out_deg, in_deg):
+            any_f = bitmap.any_rows(frontier)              # [k, vl]
             active = jax.vmap(lambda m: compact_indices(m, vl)[0])(any_f)
             src, nbr, valid, total = jax.vmap(
                 lambda a, ip, ix: expand_edges(a, ip, ix, budget))(
                 active, out_indptr, out_indices)           # [k, budget]
             overflow = jax.lax.psum(
                 jnp.any(total > budget).astype(jnp.int32), axes)
-            msg = jax.vmap(
-                lambda fm, s, v: fm[jnp.maximum(s, 0)] & v[:, None])(
-                fmask, src, valid)                         # [k, budget, B']
+            # P2->P3 on packed words: gather each edge's source-mask word,
+            # scatter-OR into the GLOBAL candidate planes (the crossbar
+            # payload), no bool intermediates
+            msg = jax.vmap(lambda fw, s: fw[jnp.maximum(s, 0)])(
+                frontier, src)                             # [k, budget, nwb]
             tgt = jnp.where(valid, nbr, n_pad).reshape(-1)
-            cand = jnp.zeros((n_pad + 1, fmask.shape[-1]), jnp.bool_)
-            cand = cand.at[tgt].max(msg.reshape(-1, fmask.shape[-1]),
-                                    mode="drop")[:-1]
-            cand_w = bitmap.pack_rows(cand).reshape(-1)    # [n_pad * nwb]
+            cand_w = bitmap._scatter_or_rows(
+                jnp.zeros((n_pad, nwb), jnp.uint32), tgt,
+                msg.reshape(-1, nwb)).reshape(-1)          # [n_pad * nwb]
             if cfg.crossbar == "staged":
                 cand_dev = or_reduce_scatter_staged(cand_w, axes, sizes)
             else:
@@ -331,21 +355,24 @@ class DistributedBFS:
             cand_local = cand_dev.reshape(k, vl, nwb)
             new = cand_local & ~seen
             s2 = seen | new
-            new_mask = bitmap.unpack_rows(new, nb)
+            new_mask = bitmap.unpack_rows(new, nb)         # level update
             lev2 = jnp.where(new_mask, lvl + 1, level)
-            return (new, s2, lev2, overflow,
-                    jax.lax.psum(jnp.sum(total), axes))
+            statvec = self._ms_statvec_b(
+                new, s2, out_deg, in_deg,
+                jax.lax.psum(jnp.sum(total), axes), overflow, nb)
+            return new, s2, lev2, statvec
 
         sp = self._specs()
         return jax.jit(shard_map(
             push_b, mesh=self.mesh,
-            in_specs=(sp, sp, sp, P(), sp, sp),
-            out_specs=(sp, sp, sp, P(), P())))
+            in_specs=(sp, sp, sp, P(), sp, sp, sp, sp),
+            out_specs=(sp, sp, sp, P())))
 
     def _pull_batch_fn(self, budget: int, nb: int):
         axes, vl, nwb = self.axes, self.vl, bitmap.num_words(nb)
 
-        def pull_b(frontier, seen, level, lvl, in_indptr, in_indices):
+        def pull_b(frontier, seen, level, lvl, in_indptr, in_indices,
+                   out_deg, in_deg):
             # all-gather the packed source planes of every vertex: the pull
             # mode's "read current_frontier of remote parents", batched.
             f_global = jax.lax.all_gather(frontier, axes,
@@ -358,25 +385,27 @@ class DistributedBFS:
                 unvisited, in_indptr, in_indices)
             overflow = jax.lax.psum(
                 jnp.any(total > budget).astype(jnp.int32), axes)
-            msg = bitmap.unpack_rows(
-                f_global[jnp.maximum(parent, 0)], nb) & valid[..., None]
-            cand = jax.vmap(
-                lambda t, m: jnp.zeros((vl + 1, nb), jnp.bool_)
-                .at[t].max(m, mode="drop")[:-1])(
+            # packed P2->P3: parents' plane words scatter-OR into each
+            # PE's local candidate words (per-shard vmap, no bool planes)
+            msg = f_global[jnp.maximum(parent, 0)]         # [k, budget, nwb]
+            cand_w = jax.vmap(
+                lambda t, m: bitmap._scatter_or_rows(
+                    jnp.zeros((vl, nwb), jnp.uint32), t, m))(
                 jnp.where(valid, child, vl), msg)
-            cand_w = bitmap.pack_rows(cand)
             new = cand_w & ~seen
             s2 = seen | new
-            new_mask = bitmap.unpack_rows(new, nb)
+            new_mask = bitmap.unpack_rows(new, nb)         # level update
             lev2 = jnp.where(new_mask, lvl + 1, level)
-            return (new, s2, lev2, overflow,
-                    jax.lax.psum(jnp.sum(total), axes))
+            statvec = self._ms_statvec_b(
+                new, s2, out_deg, in_deg,
+                jax.lax.psum(jnp.sum(total), axes), overflow, nb)
+            return new, s2, lev2, statvec
 
         sp = self._specs()
         return jax.jit(shard_map(
             pull_b, mesh=self.mesh,
-            in_specs=(sp, sp, sp, P(), sp, sp),
-            out_specs=(sp, sp, sp, P(), P())))
+            in_specs=(sp, sp, sp, P(), sp, sp, sp, sp),
+            out_specs=(sp, sp, sp, P())))
 
     def _get(self, kind: str, budget: int, nb: int = 0):
         key = (kind, budget, nb)
@@ -505,42 +534,42 @@ class DistributedBFS:
         else:
             roots_r = roots
         frontier, seen, level = self.init_state_batch(roots_r)
-        stats = self._get("stats_b", 0, b)
+        # one-sync-per-level driver: every step returns the next level's
+        # scheduler stats as ONE replicated int32[7]; the loop's only
+        # blocking device->host transfer per level is that vector.
+        sv = np.asarray(self._get("stats_b", 0, b)(
+            frontier, seen, self.out_deg, self.in_deg))
         budget = cfg.edge_budget
-        lvl = jnp.int32(0)
-        mode = jnp.int32(PUSH)
+        mode = PUSH
         iters = 0
         inspected = 0
         push_iters = pull_iters = 0
         max_iters = max_iters or self.n_pad
-        while iters < max_iters:
-            n_f, m_f, m_u, n_u = stats(frontier, seen, self.out_indptr,
-                                       self.in_indptr)
-            if int(n_f) == 0:
-                break
-            mode = choose_mode(cfg.scheduler, mode, n_f, m_f, m_u,
-                               pg.num_vertices, n_u)
-            is_push = int(mode) == PUSH
-            need = int(m_f) if is_push else int(m_u)
+        while iters < max_iters and int(sv[SV_NF]) > 0:
+            mode = choose_mode_host(cfg.scheduler, mode, int(sv[SV_NF]),
+                                    int(sv[SV_MF]), int(sv[SV_MU]),
+                                    pg.num_vertices, int(sv[SV_NU]))
+            is_push = mode == PUSH
+            need = int(sv[SV_MF]) if is_push else int(sv[SV_MU])
             while budget * self.k < need:
                 budget *= 2
             while True:
                 kind = "push_b" if is_push else "pull_b"
                 arrays = ((self.out_indptr, self.out_indices) if is_push
                           else (self.in_indptr, self.in_indices))
-                (frontier2, seen2, level2, overflow,
-                 total) = self._get(kind, budget, b)(
-                    frontier, seen, level, lvl, *arrays)
-                if int(overflow) == 0:
+                (frontier2, seen2, level2, statvec) = self._get(
+                    kind, budget, b)(frontier, seen, level, np.int32(iters),
+                                     *arrays, self.out_deg, self.in_deg)
+                sv = np.asarray(statvec)
+                if int(sv[SV_OVERFLOW]) == 0:
                     break
                 budget *= 2            # HBM-reader queue deepening, retry
             frontier, seen, level = frontier2, seen2, level2
-            inspected += int(total)
+            inspected += int(sv[SV_TOTAL])
             if is_push:
                 push_iters += 1
             else:
                 pull_iters += 1
-            lvl = lvl + 1
             iters += 1
         lev = np.asarray(level).reshape(-1, b)        # [q*vl, B] reindexed
         g = np.arange(self.n_pad)

@@ -11,27 +11,45 @@ Two execution paths:
   gather + bitmap tests), P3 (result writing: fused bitmap update).  It
   counts *inspected edges* per mode, which is what the paper's Fig. 8/10
   comparisons measure, and drives GTEPS benchmarks.
+
+Packed-word invariant (MS-BFS): frontier/seen/candidate state is packed
+uint32 plane words end to end — plane state never unpacks between P1 and
+the level update.  The paper earns its GTEPS by streaming whole 256/512-bit
+bitmap words per HBM beat; the software analogue is that every step
+gathers, ORs and commits uint32 source-mask words directly (Pallas
+``msbfs_propagate`` kernel or the ``bitmap._scatter_or_rows`` /
+``bitmap.segment_or_rows`` jnp fallbacks), and each level pays exactly ONE
+blocking device->host transfer: a stacked int32 stats vector fused into
+the step itself.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from functools import partial
+from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitmap
-from repro.core.scheduler import PULL, PUSH, SchedulerConfig, choose_mode
+from repro.core.scheduler import (PULL, PUSH, SchedulerConfig, choose_mode,
+                                  choose_mode_host)
 from repro.graph.csr import CSRGraph, edge_sources
 
 INF = jnp.int32(2 ** 30)
 
+# Layout of the per-level fused stats vector (int32[7]) every step returns:
+# next-frontier stats for the Scheduler, this step's edge total + overflow
+# flag, and the new-discovery popcount — ONE device->host transfer per level.
+SV_NF, SV_MF, SV_MU, SV_NU, SV_TOTAL, SV_OVERFLOW, SV_COUNT = range(7)
+
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=("out_indptr", "out_indices", "in_indptr", "in_indices",
-                      "out_src", "in_child"),
+                      "out_src", "in_child", "out_deg", "in_deg",
+                      "in_seg_first", "in_seg_end"),
          meta_fields=("n", "n_pad"))
 @dataclasses.dataclass(frozen=True)
 class LocalGraph:
@@ -39,6 +57,10 @@ class LocalGraph:
 
     All index arrays are int32 (graphs up to 2**31 edges; enable
     jax_enable_x64 for larger — host-side construction is already int64).
+    Degrees are precomputed once at build time (they feed the per-level
+    scheduler stats; re-deriving them with ``jnp.diff`` every level was
+    pure waste), as are the CSC segment descriptors the scan-based pull
+    propagate uses (``in_seg_first``/``in_seg_end``).
     """
 
     n: int
@@ -49,14 +71,10 @@ class LocalGraph:
     in_indices: jax.Array
     out_src: jax.Array      # int32[E] edge-parallel CSR sources
     in_child: jax.Array     # int32[E] edge-parallel CSC rows (children)
-
-    @property
-    def out_deg(self):
-        return jnp.diff(self.out_indptr).astype(jnp.int32)
-
-    @property
-    def in_deg(self):
-        return jnp.diff(self.in_indptr).astype(jnp.int32)
+    out_deg: jax.Array      # int32[n_pad] stored out-degrees
+    in_deg: jax.Array       # int32[n_pad] stored in-degrees
+    in_seg_first: jax.Array  # bool[E]  e starts a child's in-list
+    in_seg_end: jax.Array    # int32[n_pad] last in-edge per child (-1: none)
 
 
 def build_local_graph(csr: CSRGraph, csc: CSRGraph) -> LocalGraph:
@@ -67,14 +85,26 @@ def build_local_graph(csr: CSRGraph, csc: CSRGraph) -> LocalGraph:
         return np.concatenate(
             [indptr, np.full(n_pad - n, indptr[-1], dtype=indptr.dtype)])
 
+    out_ptr = pad_ptr(csr.indptr)
+    in_ptr = pad_ptr(csc.indptr)
+    in_deg = np.diff(in_ptr)
+    e_in = int(csc.indices.shape[0])
+    in_first = np.zeros(e_in, dtype=bool)
+    in_first[in_ptr[:-1][in_deg > 0]] = True
+    in_end = np.where(in_deg > 0, in_ptr[1:] - 1, -1)
+
     return LocalGraph(
         n=n, n_pad=n_pad,
-        out_indptr=jnp.asarray(pad_ptr(csr.indptr).astype(np.int32)),
+        out_indptr=jnp.asarray(out_ptr.astype(np.int32)),
         out_indices=jnp.asarray(csr.indices),
-        in_indptr=jnp.asarray(pad_ptr(csc.indptr).astype(np.int32)),
+        in_indptr=jnp.asarray(in_ptr.astype(np.int32)),
         in_indices=jnp.asarray(csc.indices),
         out_src=jnp.asarray(edge_sources(csr)),
         in_child=jnp.asarray(edge_sources(csc)),
+        out_deg=jnp.asarray(np.diff(out_ptr).astype(np.int32)),
+        in_deg=jnp.asarray(in_deg.astype(np.int32)),
+        in_seg_first=jnp.asarray(in_first),
+        in_seg_end=jnp.asarray(in_end.astype(np.int32)),
     )
 
 
@@ -92,7 +122,6 @@ def _dense_step(g: LocalGraph, frontier_w, visited_w):
 
 def bfs_reference(g: LocalGraph, root: int, max_iters: int | None = None):
     """Fully-jit Algorithm 2 loop (dense steps).  Returns level int32[n]."""
-    nw = bitmap.num_words(g.n_pad)
     max_iters = max_iters or g.n_pad
 
     def cond(state):
@@ -160,22 +189,50 @@ def _p3_update(cand_w, visited_w, use_pallas: bool):
     return new, visited_w | new
 
 
+def _statvec(g: LocalGraph, new_w, visited_w, total, overflow):
+    """Fused per-level stats (single-source): one stacked int32[7]."""
+    fmask = bitmap.unpack(new_w, g.n_pad)
+    umask = ~bitmap.unpack(visited_w, g.n_pad)
+    return jnp.stack([
+        jnp.sum(fmask, dtype=jnp.int32),
+        jnp.sum(jnp.where(fmask, g.out_deg, 0), dtype=jnp.int32),
+        jnp.sum(jnp.where(umask, g.in_deg, 0), dtype=jnp.int32),
+        jnp.sum(umask, dtype=jnp.int32),
+        jnp.asarray(total, jnp.int32),
+        jnp.asarray(overflow, jnp.int32),
+        bitmap.popcount(new_w),
+    ])
+
+
+@jax.jit
+def _sbfs_init(g: LocalGraph, roots):
+    frontier = bitmap.from_indices_dense(roots, g.n_pad)
+    level = jnp.full((g.n_pad,), INF, jnp.int32).at[roots[0]].set(0)
+    return (frontier, frontier, level,
+            _statvec(g, frontier, frontier, 0, 0))
+
+
 @partial(jax.jit, static_argnames=("budget", "use_pallas"))
-def push_step(g: LocalGraph, frontier_w, visited_w, budget: int,
+def push_step(g: LocalGraph, frontier_w, visited_w, level, lvl, budget: int,
               use_pallas: bool = False):
-    """Push iteration: expand out-lists of frontier, filter by visited."""
+    """Push iteration: expand out-lists of frontier, filter by visited.
+
+    Level update and next-level stats are folded in; returns
+    (new, visited, level, statvec) — the driver fetches only ``statvec``.
+    """
     fmask = bitmap.unpack(frontier_w, g.n_pad)
-    active, n_f = compact_indices(fmask, g.n_pad)
+    active, _ = compact_indices(fmask, g.n_pad)
     _, nbr, valid, total = expand_edges(active, g.out_indptr, g.out_indices,
                                         budget)
     unvisited = ~bitmap.test_bits(visited_w, jnp.maximum(nbr, 0)) & valid
     cand = bitmap.from_indices_dense(jnp.where(unvisited, nbr, -1), g.n_pad)
     new, vis2 = _p3_update(cand, visited_w, use_pallas)
-    return new, vis2, total, total > budget
+    level2 = jnp.where(bitmap.unpack(new, g.n_pad), lvl + 1, level)
+    return new, vis2, level2, _statvec(g, new, vis2, total, total > budget)
 
 
 @partial(jax.jit, static_argnames=("budget", "use_pallas"))
-def pull_step(g: LocalGraph, frontier_w, visited_w, budget: int,
+def pull_step(g: LocalGraph, frontier_w, visited_w, level, lvl, budget: int,
               use_pallas: bool = False):
     """Pull iteration: expand in-lists of unvisited, test frontier bit."""
     umask = ~bitmap.unpack(visited_w, g.n_pad)
@@ -185,18 +242,8 @@ def pull_step(g: LocalGraph, frontier_w, visited_w, budget: int,
     hit = bitmap.test_bits(frontier_w, jnp.maximum(parent, 0)) & valid
     cand = bitmap.from_indices_dense(jnp.where(hit, child, -1), g.n_pad)
     new, vis2 = _p3_update(cand, visited_w, use_pallas)
-    return new, vis2, total, total > budget
-
-
-@jax.jit
-def _iter_stats(g: LocalGraph, frontier_w, visited_w):
-    fmask = bitmap.unpack(frontier_w, g.n_pad)
-    umask = ~bitmap.unpack(visited_w, g.n_pad)
-    n_f = jnp.sum(fmask, dtype=jnp.int32)
-    m_f = jnp.sum(jnp.where(fmask, g.out_deg, 0), dtype=jnp.int32)
-    m_u = jnp.sum(jnp.where(umask, g.in_deg, 0), dtype=jnp.int32)
-    n_u = jnp.sum(umask, dtype=jnp.int32)
-    return n_f, m_f, m_u, n_u
+    level2 = jnp.where(bitmap.unpack(new, g.n_pad), lvl + 1, level)
+    return new, vis2, level2, _statvec(g, new, vis2, total, total > budget)
 
 
 @dataclasses.dataclass
@@ -208,6 +255,7 @@ class BFSResult:
     pull_iters: int
     traversed_edges: int
     seconds: float
+    host_transfers: int = 0     # blocking device->host fetches during run
 
     @property
     def gteps(self) -> float:
@@ -215,7 +263,13 @@ class BFSResult:
 
 
 class BFSRunner:
-    """Python-driven hybrid BFS with budgeted gather steps (bench engine)."""
+    """Python-driven hybrid BFS with budgeted gather steps (bench engine).
+
+    One-sync-per-level driver: every step returns its successor's stats as
+    a stacked int32 vector, so the loop performs exactly one blocking
+    device->host transfer per level (plus one for the initial frontier and
+    one final level-array readback).
+    """
 
     def __init__(self, g: LocalGraph, sched: SchedulerConfig | None = None,
                  init_budget: int = 1 << 15, use_pallas: bool = False):
@@ -223,56 +277,70 @@ class BFSRunner:
         self.sched = sched or SchedulerConfig()
         self.init_budget = init_budget
         self.use_pallas = use_pallas
+        self._transfers = 0
+        # fetched once here so the GTEPS accounting after each run is not
+        # an extra (uncounted) device->host transfer
+        self._out_deg_np = np.asarray(g.out_deg)[: g.n]
 
-    def run(self, root: int, time_it: bool = False) -> BFSResult:
+    @property
+    def num_vertices(self) -> int:
+        return int(self.g.n)
+
+    def _fetch(self, arr) -> np.ndarray:
+        self._transfers += 1
+        return np.asarray(arr)
+
+    def run(self, root: int) -> BFSResult:
         g = self.g
-        frontier = bitmap.from_indices_dense(jnp.array([root]), g.n_pad)
-        visited = frontier
-        level = jnp.full((g.n_pad,), INF, jnp.int32).at[root].set(0)
-        mode = jnp.int32(PUSH)
+        self._transfers = 0
+        t0 = time.perf_counter()
+        frontier, visited, level, statvec = _sbfs_init(
+            g, jnp.asarray([root], jnp.int32))
+        sv = self._fetch(statvec)
+        mode = PUSH
         lvl = 0
         inspected = 0
         push_iters = pull_iters = 0
-        budget = self.init_budget
-        t0 = time.perf_counter()
-        while True:
-            n_f, m_f, m_u, n_u = _iter_stats(g, frontier, visited)
-            if int(n_f) == 0:
-                break
-            mode = choose_mode(self.sched, mode, n_f, m_f, m_u, g.n, n_u)
-            step = push_step if int(mode) == PUSH else pull_step
-            need = int(m_f) if int(mode) == PUSH else int(m_u)
-            while budget < min(need, g.out_indices.shape[0] + 1):
+        # no point budgeting past the whole edge array (keeps the budgeted
+        # kernels small on tiny graphs); the overflow loop still deepens
+        budget = min(self.init_budget,
+                     max(g.out_indices.shape[0], g.in_indices.shape[0]) + 1)
+        while int(sv[SV_NF]) > 0:
+            mode = choose_mode_host(self.sched, mode, int(sv[SV_NF]),
+                                    int(sv[SV_MF]), int(sv[SV_MU]), g.n,
+                                    int(sv[SV_NU]))
+            step = push_step if mode == PUSH else pull_step
+            need = int(sv[SV_MF]) if mode == PUSH else int(sv[SV_MU])
+            cap = (g.out_indices if mode == PUSH else g.in_indices).shape[0]
+            while budget < min(need, cap + 1):
                 budget *= 2
             # retry from the PRE-step visited: an overflowed (truncated)
             # step may have committed a partial discovery set
-            vis0 = visited
-            new, visited, total, overflow = step(g, frontier, vis0, budget,
-                                                 self.use_pallas)
-            while bool(overflow):   # HBM-reader queue overflow: deepen, retry
+            state0 = (frontier, visited, level)
+            frontier, visited, level, statvec = step(
+                g, *state0, np.int32(lvl), budget, self.use_pallas)
+            sv = self._fetch(statvec)
+            while bool(sv[SV_OVERFLOW]):   # HBM-reader overflow: deepen
                 budget *= 2
-                new, visited, total, overflow = step(g, frontier, vis0,
-                                                     budget, self.use_pallas)
-            new_mask = bitmap.unpack(new, g.n_pad)
-            level = jnp.where(new_mask, lvl + 1, level)
-            frontier = new
+                frontier, visited, level, statvec = step(
+                    g, *state0, np.int32(lvl), budget, self.use_pallas)
+                sv = self._fetch(statvec)
             lvl += 1
-            inspected += int(total)
-            if int(mode) == PUSH:
+            inspected += int(sv[SV_TOTAL])
+            if mode == PUSH:
                 push_iters += 1
             else:
                 pull_iters += 1
         level.block_until_ready()
         dt = time.perf_counter() - t0
-        level_np = np.asarray(level[: g.n])
+        level_np = self._fetch(level[: g.n])
         # GTEPS metric per paper §VI-A: sum of outgoing neighbor-list lengths
         # of all visited vertices; each edge counted once.
-        out_deg = np.asarray(jnp.diff(g.out_indptr))[: g.n]
-        traversed = count_traversed_edges(out_deg, level_np)
+        traversed = count_traversed_edges(self._out_deg_np, level_np)
         return BFSResult(level=level_np, iterations=lvl,
                          edges_inspected=inspected, push_iters=push_iters,
                          pull_iters=pull_iters, traversed_edges=traversed,
-                         seconds=dt)
+                         seconds=dt, host_transfers=self._transfers)
 
 
 # ---------------------------------------------------------------------------
@@ -284,6 +352,12 @@ class BFSRunner:
 # propagating along an edge is one 32/64-bit OR instead of B separate
 # traversals, the software analogue of keeping all HBM pseudo-channels busy
 # with concurrent queries (GraphScale; Then et al., VLDB'14).
+#
+# The packed words are the ONLY state representation: push gathers the
+# frontier words of budgeted edges and scatter-ORs them into candidate
+# words (Pallas msbfs_propagate / bitmap._scatter_or_rows); pull reduces
+# each vertex's in-list with a segmented OR-scan over the CSC edge stream
+# (bitmap.segment_or_rows) — no unpack, no bool plane arrays, no scatter.
 # ---------------------------------------------------------------------------
 
 def _ms_init(g: LocalGraph, roots: jax.Array):
@@ -296,17 +370,82 @@ def _ms_init(g: LocalGraph, roots: jax.Array):
     return frontier, frontier, level
 
 
+@jax.jit
+def _ms_init_state(g: LocalGraph, roots: jax.Array):
+    frontier, seen, level = _ms_init(g, roots)
+    return (frontier, seen, level,
+            _ms_statvec(g, frontier, seen, 0, 0, roots.shape[0]))
+
+
+def _ms_statvec(g: LocalGraph, new_w, seen_w, total, overflow, nb: int):
+    """Fused per-level MS-BFS stats: scheduler inputs for the NEXT level,
+    this step's edge total/overflow, and the discovery popcount, stacked
+    into one int32[7] so the driver fetches a single array per level.
+
+    ``nb`` is the TRUE batch size: the pad planes of the last source word
+    are unseen by construction, so masking with the padded width would
+    make every vertex count as "unseen by some source" forever."""
+    pmask = bitmap.plane_mask(nb)
+    any_f = bitmap.any_rows(new_w)
+    un_any = bitmap.any_rows(~seen_w & pmask)
+    return jnp.stack([
+        jnp.sum(any_f, dtype=jnp.int32),
+        jnp.sum(jnp.where(any_f, g.out_deg, 0), dtype=jnp.int32),
+        jnp.sum(jnp.where(un_any, g.in_deg, 0), dtype=jnp.int32),
+        jnp.sum(un_any, dtype=jnp.int32),
+        jnp.asarray(total, jnp.int32),
+        jnp.asarray(overflow, jnp.int32),
+        bitmap.popcount(new_w),
+    ])
+
+
+def _ms_commit(g: LocalGraph, new_w, seen_w, level, lvl, total, overflow):
+    """Level update (the pipeline's single unpack point) + fused stats."""
+    new_mask = bitmap.unpack_rows(new_w, level.shape[1])
+    level2 = jnp.where(new_mask, lvl + 1, level)
+    return level2, _ms_statvec(g, new_w, seen_w, total, overflow,
+                               level.shape[1])
+
+
+def _propagate_edges(g: LocalGraph, frontier_w, seen_w, src, tgt, valid,
+                     use_pallas: bool):
+    """Fused P2->P3 on packed words: cand[tgt] |= frontier[src], then
+    new = cand & ~seen, seen |= new.  Pallas kernel or jnp fallback."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        new, seen2, _ = kops.msbfs_propagate(frontier_w, seen_w, src, tgt,
+                                             valid)
+        return new, seen2
+    msg = frontier_w[jnp.maximum(src, 0)]
+    cand = bitmap._scatter_or_rows(
+        jnp.zeros_like(frontier_w), jnp.where(valid, tgt, g.n_pad), msg)
+    new = cand & ~seen_w
+    return new, seen_w | new
+
+
+def _propagate_pull_scan(g: LocalGraph, frontier_w):
+    """Candidate plane words for ALL vertices via the CSC edge stream:
+    cand[v] = OR of frontier[parent] over v's in-list.  The edges are
+    already grouped by child, so a segmented OR-scan + one gather at the
+    segment ends replaces the scatter entirely (packed words throughout)."""
+    if g.in_indices.shape[0] == 0:
+        return jnp.zeros_like(frontier_w)
+    msg = frontier_w[g.in_indices]                  # [E, nw] packed gather
+    scan = bitmap.segment_or_rows(msg, g.in_seg_first)
+    return jnp.where((g.in_seg_end >= 0)[:, None],
+                     scan[jnp.maximum(g.in_seg_end, 0)], jnp.uint32(0))
+
+
 def _ms_dense_step(g: LocalGraph, frontier_w):
-    """One batched level expansion; returns candidate plane words."""
-    fmask = bitmap.unpack_rows(frontier_w)        # [n_pad, B]
-    msg = fmask[g.out_src]                        # [E, B] — shared edge read
-    cand = jnp.zeros((g.n_pad, fmask.shape[1]),
-                     jnp.bool_).at[g.out_indices].max(msg)
-    return bitmap.pack_rows(cand)
+    """One batched level expansion; returns candidate plane words.
+
+    Pull-form of the edge-parallel candidate set (identical result to the
+    push-form scatter: cand[v] = OR of frontier over v's in-neighbors)."""
+    return _propagate_pull_scan(g, frontier_w)
 
 
 def msbfs_reference(g: LocalGraph, roots, max_iters: int | None = None):
-    """Fully-jit dense MS-BFS loop.  Returns level int32[B, n]."""
+    """Fully-jit dense MS-BFS loop (packed words).  Returns level [B, n]."""
     roots = jnp.asarray(roots, jnp.int32)
     max_iters = max_iters or g.n_pad
     frontier0, seen0, level0 = _ms_init(g, roots)
@@ -329,6 +468,56 @@ def msbfs_reference(g: LocalGraph, roots, max_iters: int | None = None):
     return level[: g.n].T
 
 
+@partial(jax.jit, static_argnames=("budget", "use_pallas"))
+def ms_push_step(g: LocalGraph, frontier_w, seen_w, level, lvl, budget: int,
+                 use_pallas: bool = False):
+    """Batched push on packed words: expand out-lists of any-source
+    frontier vertices; each budgeted edge carries its endpoint's packed
+    source-mask word straight into the candidate planes (fused P2->P3)."""
+    any_f = bitmap.any_rows(frontier_w)
+    active, _ = compact_indices(any_f, g.n_pad)
+    src, nbr, valid, total = expand_edges(active, g.out_indptr,
+                                          g.out_indices, budget)
+    new, seen2 = _propagate_edges(g, frontier_w, seen_w, src, nbr, valid,
+                                  use_pallas)
+    level2, statvec = _ms_commit(g, new, seen2, level, lvl, total,
+                                 total > budget)
+    return new, seen2, level2, statvec
+
+
+@partial(jax.jit, static_argnames=("budget", "use_pallas"))
+def ms_pull_step(g: LocalGraph, frontier_w, seen_w, level, lvl,
+                 budget: int = 0, use_pallas: bool = False):
+    """Batched pull on packed words.
+
+    Default path: dense segmented OR-scan over the whole CSC edge stream
+    (never overflows, no budget).  Pallas path: budgeted expansion of
+    some-source-unseen vertices through the fused propagate kernel."""
+    if use_pallas:
+        un_any = bitmap.any_rows(
+            ~seen_w & bitmap.plane_mask(level.shape[1]))
+        active, _ = compact_indices(un_any, g.n_pad)
+        child, parent, valid, total = expand_edges(
+            active, g.in_indptr, g.in_indices, budget)
+        new, seen2 = _propagate_edges(g, frontier_w, seen_w, parent, child,
+                                      valid, True)
+        overflow = total > budget
+    else:
+        cand = _propagate_pull_scan(g, frontier_w)
+        new = cand & ~seen_w
+        seen2 = seen_w | new
+        total = jnp.int32(g.in_indices.shape[0])
+        overflow = jnp.int32(0)
+    level2, statvec = _ms_commit(g, new, seen2, level, lvl, total, overflow)
+    return new, seen2, level2, statvec
+
+
+# ---------------------------------------------------------------------------
+# Legacy bool-plane steps — the pre-packed-pipeline implementation, kept as
+# the differential/benchmark baseline (`MultiSourceBFSRunner(packed=False)`,
+# the "packed: off" rows of benchmarks/msbfs_throughput.py).
+# ---------------------------------------------------------------------------
+
 def _p3_update_ms(cand_w, seen_w, use_pallas: bool):
     """Batched P3: fused per-plane Pallas kernel or plain jnp."""
     if use_pallas:
@@ -341,10 +530,10 @@ def _p3_update_ms(cand_w, seen_w, use_pallas: bool):
 
 
 @partial(jax.jit, static_argnames=("budget", "use_pallas"))
-def ms_push_step(g: LocalGraph, frontier_w, seen_w, budget: int,
-                 use_pallas: bool = False):
-    """Batched push: expand out-lists of any-source frontier vertices; each
-    gathered edge carries the full source mask of its endpoint."""
+def _boolplane_push_step(g: LocalGraph, frontier_w, seen_w, budget: int,
+                         use_pallas: bool = False):
+    """Bool-plane push: unpacks the whole frontier, builds a [budget, B]
+    bool message array and a [n_pad+1, nb] bool scatter buffer per level."""
     nb = frontier_w.shape[1] * bitmap.WORD_BITS
     fmask = bitmap.unpack_rows(frontier_w)            # [n_pad, B']
     any_f = bitmap.any_rows(frontier_w)
@@ -361,10 +550,10 @@ def ms_push_step(g: LocalGraph, frontier_w, seen_w, budget: int,
 
 
 @partial(jax.jit, static_argnames=("budget", "use_pallas"))
-def ms_pull_step(g: LocalGraph, frontier_w, seen_w, budget: int,
-                 use_pallas: bool = False):
-    """Batched pull: vertices unseen by SOME source read their in-lists once
-    and OR their parents' frontier masks."""
+def _boolplane_pull_step(g: LocalGraph, frontier_w, seen_w, budget: int,
+                         use_pallas: bool = False):
+    """Bool-plane pull: vertices unseen by SOME source read their in-lists
+    once and OR their parents' frontier masks (via bool plane arrays)."""
     nb = frontier_w.shape[1] * bitmap.WORD_BITS
     pmask = bitmap.plane_mask(nb)
     fmask = bitmap.unpack_rows(frontier_w)
@@ -399,11 +588,16 @@ class MSBFSResult:
     levels: np.ndarray          # int32[B, n] — one level row per source
     batch: int
     iterations: int
+    # edges actually streamed per level.  NOTE: the packed pipeline's
+    # scan-based pull reads the WHOLE CSC edge stream per pull level
+    # (that is its cost model), so this is not comparable edge-for-edge
+    # with the budgeted bool-plane baseline's m_u-bounded pulls.
     edges_inspected: int
     push_iters: int
     pull_iters: int
     traversed_edges: int        # summed over all sources (paper §VI-A metric)
     seconds: float
+    host_transfers: int = 0     # blocking device->host fetches during run
 
     @property
     def aggregate_teps(self) -> float:
@@ -418,22 +612,97 @@ class MultiSourceBFSRunner:
     """Python-driven hybrid MS-BFS over a batch of roots (query engine).
 
     The per-iteration structure matches ``BFSRunner`` (stats -> mode ->
-    budgeted gather step -> P3) with all three bitmaps widened to one
-    bit-plane per source; direction choice uses any-source frontier /
+    gather/scan step -> P3) with all three bitmaps widened to one bit-plane
+    per source; direction choice uses any-source frontier /
     any-source-unseen statistics.
+
+    ``packed=True`` (default) runs the packed-word pipeline: plane state
+    never unpacks between P1 and the level update, and each level costs
+    exactly one blocking device->host transfer (the fused stats vector).
+    ``packed=False`` preserves the pre-packed bool-plane implementation as
+    a differential/benchmark baseline.
     """
 
     def __init__(self, g: LocalGraph, sched: SchedulerConfig | None = None,
-                 init_budget: int = 1 << 15, use_pallas: bool = False):
+                 init_budget: int = 1 << 15, use_pallas: bool = False,
+                 packed: bool = True):
         self.g = g
         self.sched = sched or SchedulerConfig()
         self.init_budget = init_budget
         self.use_pallas = use_pallas
+        self.packed = packed
+        self._transfers = 0
+        self.last_stats: dict = {}
+        # fetched once here so the GTEPS accounting after each run is not
+        # an extra (uncounted) device->host transfer
+        self._out_deg_np = np.asarray(g.out_deg)[: g.n]
 
-    def run(self, roots, time_it: bool = False) -> MSBFSResult:
+    @property
+    def num_vertices(self) -> int:
+        return int(self.g.n)
+
+    def _fetch(self, arr) -> np.ndarray:
+        self._transfers += 1
+        return np.asarray(arr)
+
+    def run(self, roots) -> MSBFSResult:
         g = self.g
         # validate BEFORE the int32 cast: a >= 2**31 root must error, not wrap
         roots = validate_roots(np.asarray(roots), g.n).astype(np.int32)
+        self._transfers = 0
+        if not self.packed:
+            return self._run_boolplane(roots)
+        b = int(roots.size)
+        t0 = time.perf_counter()
+        frontier, seen, level, statvec = _ms_init_state(g, jnp.asarray(roots))
+        sv = self._fetch(statvec)
+        mode = PUSH
+        lvl = 0
+        inspected = 0
+        push_iters = pull_iters = 0
+        budget = min(self.init_budget,
+                     max(g.out_indices.shape[0], g.in_indices.shape[0]) + 1)
+        while int(sv[SV_NF]) > 0:
+            mode = choose_mode_host(self.sched, mode, int(sv[SV_NF]),
+                                    int(sv[SV_MF]), int(sv[SV_MU]), g.n,
+                                    int(sv[SV_NU]))
+            # the scan-based pull is dense over the CSC edge stream: only
+            # push (and the budgeted Pallas pull) need an edge budget
+            budgeted = mode == PUSH or self.use_pallas
+            if budgeted:
+                need = int(sv[SV_MF]) if mode == PUSH else int(sv[SV_MU])
+                cap = (g.out_indices if mode == PUSH
+                       else g.in_indices).shape[0]
+                while budget < min(need, cap + 1):
+                    budget *= 2
+            step = ms_push_step if mode == PUSH else ms_pull_step
+            # retry from the PRE-step seen: an overflowed (truncated) step
+            # may have committed a partial discovery set
+            state0 = (frontier, seen, level)
+            frontier, seen, level, statvec = step(
+                g, *state0, np.int32(lvl), budget if budgeted else 0,
+                self.use_pallas)
+            sv = self._fetch(statvec)
+            while budgeted and bool(sv[SV_OVERFLOW]):
+                budget *= 2            # HBM-reader queue overflow: deepen
+                frontier, seen, level, statvec = step(
+                    g, *state0, np.int32(lvl), budget, self.use_pallas)
+                sv = self._fetch(statvec)
+            lvl += 1
+            inspected += int(sv[SV_TOTAL])
+            if mode == PUSH:
+                push_iters += 1
+            else:
+                pull_iters += 1
+        level.block_until_ready()
+        dt = time.perf_counter() - t0
+        levels = self._fetch(level[: g.n]).T       # [B, n]
+        return self._result(levels, b, lvl, inspected, push_iters,
+                            pull_iters, dt)
+
+    def _run_boolplane(self, roots: np.ndarray) -> MSBFSResult:
+        """Pre-packed-pipeline driver (bool planes + per-scalar syncs)."""
+        g = self.g
         b = int(roots.size)
         frontier, seen, level = _ms_init(g, jnp.asarray(roots))
         mode = jnp.int32(PUSH)
@@ -444,40 +713,74 @@ class MultiSourceBFSRunner:
         t0 = time.perf_counter()
         while True:
             n_f, m_f, m_u, n_u = _ms_iter_stats(g, frontier, seen)
+            n_f, m_f, m_u, n_u = (self._fetch(n_f), self._fetch(m_f),
+                                  self._fetch(m_u), self._fetch(n_u))
             if int(n_f) == 0:
                 break
             mode = choose_mode(self.sched, mode, n_f, m_f, m_u, g.n, n_u)
-            step = ms_push_step if int(mode) == PUSH else ms_pull_step
-            need = int(m_f) if int(mode) == PUSH else int(m_u)
+            is_push = int(self._fetch(mode)) == PUSH  # another per-level sync
+            step = (_boolplane_push_step if is_push
+                    else _boolplane_pull_step)
+            need = int(m_f) if is_push else int(m_u)
             while budget < min(need, g.out_indices.shape[0] + 1):
                 budget *= 2
-            # retry from the PRE-step seen: an overflowed (truncated) step
-            # may have committed a partial discovery set
             seen0 = seen
             new, seen, total, overflow = step(g, frontier, seen0, budget,
                                               self.use_pallas)
-            while bool(overflow):   # HBM-reader queue overflow: deepen, retry
+            while bool(self._fetch(overflow)):
                 budget *= 2
-                new, seen, total, overflow = step(g, frontier, seen0, budget,
-                                                  self.use_pallas)
+                new, seen, total, overflow = step(g, frontier, seen0,
+                                                  budget, self.use_pallas)
             new_mask = bitmap.unpack_rows(new, b)
             level = jnp.where(new_mask, lvl + 1, level)
             frontier = new
             lvl += 1
-            inspected += int(total)
-            if int(mode) == PUSH:
+            inspected += int(self._fetch(total))
+            if is_push:
                 push_iters += 1
             else:
                 pull_iters += 1
         level.block_until_ready()
         dt = time.perf_counter() - t0
-        levels = np.asarray(level[: g.n]).T        # [B, n]
-        out_deg = np.asarray(jnp.diff(g.out_indptr))[: g.n]
-        traversed = count_traversed_edges(out_deg, levels)
-        return MSBFSResult(levels=levels, batch=b, iterations=lvl,
-                           edges_inspected=inspected, push_iters=push_iters,
-                           pull_iters=pull_iters, traversed_edges=traversed,
-                           seconds=dt)
+        levels = self._fetch(level[: g.n]).T       # [B, n]
+        return self._result(levels, b, lvl, inspected, push_iters,
+                            pull_iters, dt)
+
+    def _result(self, levels, b, lvl, inspected, push_iters, pull_iters,
+                dt) -> MSBFSResult:
+        traversed = count_traversed_edges(self._out_deg_np, levels)
+        res = MSBFSResult(levels=levels, batch=b, iterations=lvl,
+                          edges_inspected=inspected, push_iters=push_iters,
+                          pull_iters=pull_iters, traversed_edges=traversed,
+                          seconds=dt, host_transfers=self._transfers)
+        self.last_stats = dict(
+            iterations=res.iterations, edges_inspected=res.edges_inspected,
+            push_iters=res.push_iters, pull_iters=res.pull_iters,
+            batch=res.batch, traversed_edges=res.traversed_edges,
+            seconds=res.seconds, host_transfers=res.host_transfers)
+        return res
+
+    def run_batch(self, roots) -> np.ndarray:
+        """:class:`BFSEngine` entry: levels [B, n] + ``last_stats``."""
+        return self.run(roots).levels
+
+
+@runtime_checkable
+class BFSEngine(Protocol):
+    """Minimal contract the serving layers rely on.
+
+    Any batched BFS query engine exposes the number of vertices of its
+    resident graph and answers a batch of root queries with a levels
+    matrix; per-run counters land in ``last_stats``.  Both
+    :class:`MultiSourceBFSRunner` and ``DistributedBFS`` satisfy this —
+    ``launch.dynbatch`` / ``launch.serve`` program against it instead of
+    duck-typing on ``.g`` / ``.pg``.
+    """
+
+    @property
+    def num_vertices(self) -> int: ...
+
+    def run_batch(self, roots) -> np.ndarray: ...
 
 
 def validate_roots(roots: np.ndarray, num_vertices: int) -> np.ndarray:
@@ -504,11 +807,16 @@ def validate_roots(roots: np.ndarray, num_vertices: int) -> np.ndarray:
 
 
 def engine_num_vertices(engine) -> int | None:
-    """|V| of the graph a BFS engine serves (duck-typed), or None.
+    """|V| of the graph a BFS engine serves, or None.
 
-    Recognizes the local runners (``.g`` is a :class:`LocalGraph`) and the
-    distributed engine (``.pg`` is a ``PartitionedGraph``).
+    Deprecated shim: engines now expose ``num_vertices`` directly (the
+    :class:`BFSEngine` protocol); this forwards to it, keeping the old
+    ``.g``/``.pg`` duck-typing as a fallback for wrapper engines that
+    predate the protocol.
     """
+    n = getattr(engine, "num_vertices", None)
+    if n is not None:
+        return int(n)
     g = getattr(engine, "g", None)
     if g is not None:
         return int(g.n)
@@ -520,10 +828,11 @@ def engine_num_vertices(engine) -> int | None:
 
 def count_traversed_edges(out_deg: np.ndarray, levels: np.ndarray) -> int:
     """Paper §VI-A GTEPS numerator: out-degrees of reached vertices, summed
-    over every source row of ``levels`` ([n] or [B, n])."""
-    levels = np.atleast_2d(levels)
-    return int(sum(out_deg[levels[i] < int(INF)].sum()
-                   for i in range(levels.shape[0])))
+    over every source row of ``levels`` ([n] or [B, n]) — one masked
+    matvec instead of a python loop over rows."""
+    levels = np.atleast_2d(np.asarray(levels))
+    reached = levels < int(INF)                      # [B, n]
+    return int((reached @ np.asarray(out_deg, dtype=np.int64)).sum())
 
 
 def bfs_oracle(csr: CSRGraph, root: int) -> np.ndarray:

@@ -155,6 +155,55 @@ def slice_plane_rows(rows, b: int):
     return rows[:b]
 
 
+def _scatter_or_rows(words: jax.Array, row_idx: jax.Array,
+                     msg: jax.Array) -> jax.Array:
+    """Packed scatter-OR: ``words[row_idx[e]] |= msg[e]`` for every e.
+
+    The jnp fallback for the fused P2->P3 Pallas propagate kernel
+    (``repro.kernels.msbfs_propagate``), with identical semantics: duplicate
+    target rows OR together and out-of-range rows are dropped.  ``at[].max``
+    is only an OR for single-bit values, so the words are decomposed into
+    bit planes first — vectorized over the 4 byte lanes of each uint32, so
+    the whole scatter is ONE gather-free call of uint8 single-bit planes
+    (8 planes per lane) instead of 32 sequential word-sized scatters.
+
+    words: uint32[r, nw]   accumulator (existing bits are kept)
+    row_idx: int32[m]      target row per message (OOR -> dropped)
+    msg: uint32[m, nw]     packed source-mask words to OR in
+    """
+    r, nw = words.shape
+    m = msg.shape[0]
+    # negative indices would WRAP (numpy semantics), not drop — rewrite
+    # them to r so mode="drop" discards them like any other OOR row
+    row_idx = jnp.where(row_idx < 0, r, row_idx)
+    shifts = jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8)
+    def to_planes(w):
+        b8 = jax.lax.bitcast_convert_type(w, jnp.uint8)      # [.., nw, 4]
+        return (b8[..., None] & shifts).reshape(*w.shape[:-1], nw * 32)
+    acc = to_planes(words).at[row_idx].max(to_planes(msg), mode="drop")
+    bytes_ = acc.reshape(r, nw, 4, 8).sum(-1).astype(jnp.uint8)
+    return jax.lax.bitcast_convert_type(bytes_, jnp.uint32).reshape(r, nw)
+
+
+def segment_or_rows(msg: jax.Array, first: jax.Array) -> jax.Array:
+    """Inclusive segmented OR-scan over rows of packed words.
+
+    ``msg`` is uint32[E, nw] (one packed source-mask per edge), ``first`` is
+    bool[E] marking the first edge of each contiguous segment.  Returns
+    scan[E, nw] where scan[e] = OR of msg over e's segment up to e — read
+    the last slot of each segment for the per-segment OR.  This is how the
+    pull direction reduces each vertex's in-list without any scatter: CSC
+    edges are already grouped by child, so the segment boundaries are
+    static (``LocalGraph.in_seg_first`` / ``in_seg_end``).
+    """
+    def op(a, b):
+        av, af = a
+        bv, bf = b
+        return jnp.where(bf[..., None], bv, av | bv), af | bf
+    v, _ = jax.lax.associative_scan(op, (msg, first), axis=0)
+    return v
+
+
 def any_rows(words: jax.Array) -> jax.Array:
     """bool[...]: does row v have any source bit set?"""
     return jnp.any(words != 0, axis=-1)

@@ -28,6 +28,30 @@ class SchedulerConfig:
     beta: float = 24.0
 
 
+def choose_mode_host(cfg: SchedulerConfig, prev_mode: int, n_f: int,
+                     m_f: int, m_u: int, n: int, n_unvisited: int) -> int:
+    """Pure-python :func:`choose_mode` for the one-sync-per-level drivers.
+
+    The packed drivers fetch one stacked stats vector per level and decide
+    the direction on the host — routing the already-fetched scalars back
+    through the jnp version would re-enter the device for a trivial
+    comparison.  Must stay semantically identical to :func:`choose_mode`.
+    """
+    if cfg.policy == "push":
+        return PUSH
+    if cfg.policy == "pull":
+        return PULL
+    if cfg.policy == "paper":
+        grow = n_f * 20 > n
+        ending = n_unvisited * 20 < n
+        return PULL if (grow and not ending) else PUSH
+    if prev_mode == PUSH and m_f * cfg.alpha > m_u:
+        return PULL
+    if prev_mode == PULL and n_f * cfg.beta < n:
+        return PUSH
+    return int(prev_mode)
+
+
 def choose_mode(cfg: SchedulerConfig, prev_mode, n_f, m_f, m_u, n, n_unvisited):
     """Return PUSH or PULL for the upcoming iteration (traced-friendly)."""
     if cfg.policy == "push":

@@ -1,0 +1,116 @@
+"""Fused P2->P3 MS-BFS propagate kernel (paper §IV-C, batched).
+
+The FPGA pipeline streams whole 256/512-bit frontier words per HBM beat:
+P2 reads the packed source-mask word of each gathered edge's endpoint, P3
+ORs it into the candidate word of the edge's target and commits
+``next |= cand & ~visited`` — the plane state never exists in unpacked
+(one-byte-per-bit) form.  This kernel is the TPU analogue for the MS-BFS
+engines: one pass over the budgeted edge list that
+
+    cand[tgt[e]] |= frontier[src[e]]          (gather + scatter-OR, P2)
+    new           = cand & ~seen              (P3 result writing)
+    seen'         = seen | new
+    count        += popcount(new)             (Scheduler stats, for free)
+
+with no ``unpack_rows``, no ``[budget, B]`` bool message array and no
+``[n_pad+1, nb]`` bool scatter buffer — the uint32 plane words are the only
+currency (the win GraphScale/ScalaBFS get from packed BRAM bitmaps).
+
+Layout: the edge index arrays are scalar-prefetched (SMEM, like the
+paged-gather page table); the frontier/seen/candidate plane arrays live
+whole in VMEM across the 1-D grid over edge chunks (the output BlockSpecs
+map every grid step to block (0, 0), so the accumulator persists between
+steps on TPU's sequential grid).  Each chunk runs a fori_loop of
+read-modify-write row updates — the per-edge loop is the literal analogue
+of the PE's one-edge-per-cycle P2 stage.  The last grid step applies P3 in
+place.  VMEM bound: 4 plane arrays of (n_rows+1) * nw words (~1 MB at
+|V|=64k, B=32); larger graphs need a row-partitioned variant.
+
+The pure-jnp oracle with identical semantics is
+``repro.core.bitmap._scatter_or_rows`` (see ``kernels.ref``); callers
+invoke this through ``repro.kernels.ops.msbfs_propagate``, which appends
+the trash row and pads the edge list.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(src_ref, tgt_ref, frontier_ref, seen_ref, new_ref, vout_ref,
+            cnt_ref, *, block_edges: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        new_ref[...] = jnp.zeros_like(new_ref[...])
+
+    base = step * block_edges
+
+    def body(i, carry):
+        e = base + i
+        s = src_ref[e]
+        t = tgt_ref[e]
+        msg = pl.load(frontier_ref, (pl.ds(s, 1), slice(None)))
+        cur = pl.load(new_ref, (pl.ds(t, 1), slice(None)))
+        pl.store(new_ref, (pl.ds(t, 1), slice(None)), cur | msg)
+        return carry
+
+    jax.lax.fori_loop(0, block_edges, body, 0)
+
+    @pl.when(step == pl.num_programs(0) - 1)
+    def _p3():
+        cand = new_ref[...]
+        seen = seen_ref[...]
+        nf = cand & ~seen
+        new_ref[...] = nf
+        vout_ref[...] = seen | nf
+        cnt_ref[0, 0] = jnp.sum(jax.lax.population_count(nf)
+                                .astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_edges", "interpret"))
+def msbfs_propagate_planes(frontier: jax.Array, seen: jax.Array,
+                           src: jax.Array, tgt: jax.Array,
+                           block_edges: int = 1024, interpret: bool = True):
+    """Fused gather/scatter-OR/P3 over packed plane words.
+
+    frontier/seen: uint32[n_rows, nw] — the caller appends a trash row
+        (frontier trash = 0, seen trash = all-ones) so invalid edges can
+        point at row ``n_rows - 1`` and contribute nothing to the count.
+    src/tgt: int32[m] in [0, n_rows), m a multiple of ``block_edges``.
+
+    Returns (new, seen_out, count[1, 1]) where
+    new = scatter_or(frontier[src] -> tgt) & ~seen, seen_out = seen | new,
+    count = popcount(new).
+    """
+    n_rows, nw = frontier.shape
+    m = src.shape[0]
+    assert m % block_edges == 0, (m, block_edges)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m // block_edges,),
+        in_specs=[
+            pl.BlockSpec((n_rows, nw), lambda i, s, t: (0, 0)),
+            pl.BlockSpec((n_rows, nw), lambda i, s, t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_rows, nw), lambda i, s, t: (0, 0)),
+            pl.BlockSpec((n_rows, nw), lambda i, s, t: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, s, t: (0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block_edges=block_edges),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_rows, nw), jnp.uint32),
+            jax.ShapeDtypeStruct((n_rows, nw), jnp.uint32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(src, tgt, frontier, seen)

@@ -13,18 +13,54 @@ import numpy as np
 
 from repro.kernels.bitmap_update import bitmap_update, bitmap_update_batch
 from repro.kernels.csr_gather import gather_pages
+from repro.kernels.msbfs_propagate import msbfs_propagate_planes
 from repro.kernels.pull_spmv import pull_spmv_blocks
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
 
+def msbfs_propagate(frontier_w: jax.Array, seen_w: jax.Array,
+                    src: jax.Array, tgt: jax.Array, valid: jax.Array,
+                    block_edges: int = 1024, interpret: bool | None = None):
+    """Fused P2->P3 MS-BFS propagate: gather ``frontier_w[src]`` words and
+    scatter-OR them into the candidate planes at ``tgt``, then commit
+    ``new = cand & ~seen`` / ``seen |= new`` in the same kernel pass.
+
+    frontier_w/seen_w: uint32[n_pad, nw] packed plane words.
+    src/tgt: int32[m] edge endpoints; slots with ``valid`` False (or any
+    out-of-range index) are dropped.  Returns (new, seen_out, new_count).
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    n, nw = frontier_w.shape
+    m = src.shape[0]
+    if m == 0:
+        new = jnp.zeros_like(frontier_w)
+        return new, seen_w, jnp.int32(0)
+    # trash row n: zero frontier mask (contributes nothing), all-ones seen
+    # (so the trash candidates never count as discoveries)
+    f1 = jnp.concatenate([frontier_w, jnp.zeros((1, nw), jnp.uint32)])
+    s1 = jnp.concatenate(
+        [seen_w, jnp.full((1, nw), 0xFFFFFFFF, jnp.uint32)])
+    ok = valid & (src >= 0) & (src < n) & (tgt >= 0) & (tgt < n)
+    sidx = jnp.where(ok, src, n).astype(jnp.int32)
+    tidx = jnp.where(ok, tgt, n).astype(jnp.int32)
+    blk = min(block_edges, m)
+    pad = (-m) % blk
+    if pad:
+        sidx = jnp.pad(sidx, (0, pad), constant_values=n)
+        tidx = jnp.pad(tidx, (0, pad), constant_values=n)
+    new, vout, cnt = msbfs_propagate_planes(f1, s1, sidx, tidx,
+                                            block_edges=blk,
+                                            interpret=interpret)
+    return new[:-1], vout[:-1], cnt[0, 0]
+
+
 def fused_frontier_update(cand_words: jax.Array, visited_words: jax.Array):
     """P3 update on flat uint32[w] words; returns (new, visited, count)."""
     w = cand_words.shape[0]
-    rows = max(w // 128, 1)
-    pad = rows * 128 - w if rows * 128 >= w else (rows + 1) * 128 - w
-    if rows * 128 < w:
-        rows += 1
+    rows = max((w + 127) // 128, 1)
+    pad = rows * 128 - w
     c2 = jnp.pad(cand_words, (0, pad)).reshape(rows, 128)
     v2 = jnp.pad(visited_words, (0, pad)).reshape(rows, 128)
     block_rows = _largest_divisor(rows, 16)

@@ -22,6 +22,22 @@ def bitmap_update_batch_ref(cand: jax.Array, visited: jax.Array):
     return nf, vout, cnt
 
 
+def msbfs_propagate_planes_ref(frontier: jax.Array, seen: jax.Array,
+                               src: jax.Array, tgt: jax.Array):
+    """Oracle for kernels.msbfs_propagate.msbfs_propagate_planes.
+
+    Same padded-input contract as the kernel (trash row appended by the
+    ops wrapper); the scatter-OR is the per-bit-plane jnp fallback
+    ``bitmap._scatter_or_rows`` — the two must agree bit for bit.
+    """
+    from repro.core.bitmap import _scatter_or_rows
+    cand = _scatter_or_rows(jnp.zeros_like(frontier), tgt, frontier[src])
+    nf = cand & ~seen
+    cnt = jnp.sum(jax.lax.population_count(nf).astype(jnp.int32)
+                  ).reshape(1, 1)
+    return nf, seen | nf, cnt
+
+
 def gather_pages_ref(edges_paged: jax.Array, page_ids: jax.Array):
     """Oracle for kernels.csr_gather.gather_pages."""
     return edges_paged[page_ids]

@@ -136,6 +136,8 @@ class DynamicBatcher:
         self.max_batch = int(max_batch)
         self.max_pending = int(max_pending)
         self.pad_to_plane = bool(pad_to_plane)
+        # BFSEngine protocol: every engine exposes num_vertices + run_batch
+        # (engine_num_vertices keeps a .g/.pg fallback for older wrappers)
         self.num_vertices = engine_num_vertices(engine)
         if out_deg is None and getattr(engine, "g", None) is not None:
             out_deg = np.asarray(engine.g.out_deg)[:engine.g.n]
@@ -304,22 +306,14 @@ class DynamicBatcher:
                        push_iters=0, pull_iters=0, traversed_edges=None)
         t0 = time.perf_counter()
         try:
-            if hasattr(self.engine, "run_batch"):    # DistributedBFS
-                levels = np.asarray(self.engine.run_batch(slots))
-                ws.seconds = time.perf_counter() - t0
-                st = dict(getattr(self.engine, "last_stats", {}))
-                ws.iterations = int(st.get("iterations", 0))
-                ws.edges_inspected = int(st.get("edges_inspected", 0))
-                ws.push_iters = int(st.get("push_iters", 0))
-                ws.pull_iters = int(st.get("pull_iters", 0))
-            else:                                    # MultiSourceBFSRunner
-                res = self.engine.run(slots)
-                ws.seconds = time.perf_counter() - t0
-                levels = res.levels
-                ws.iterations = res.iterations
-                ws.edges_inspected = res.edges_inspected
-                ws.push_iters = res.push_iters
-                ws.pull_iters = res.pull_iters
+            # BFSEngine protocol: run_batch + last_stats, no engine sniffing
+            levels = np.asarray(self.engine.run_batch(slots))
+            ws.seconds = time.perf_counter() - t0
+            st = dict(getattr(self.engine, "last_stats", {}))
+            ws.iterations = int(st.get("iterations", 0))
+            ws.edges_inspected = int(st.get("edges_inspected", 0))
+            ws.push_iters = int(st.get("push_iters", 0))
+            ws.pull_iters = int(st.get("pull_iters", 0))
             levels = bitmap.slice_plane_rows(levels, b)
             if self.out_deg is not None:
                 # recount over the REAL requests only: pad slots are

@@ -139,22 +139,15 @@ def bfs_batch(roots, *, graph: str = "rmat16-16", engine=None,
     # raise, not truncate)
     roots = np.asarray(roots)
     t0 = time.perf_counter()
-    # duck-typed like launch.dynbatch._dispatch, so wrapper engines that
-    # forward run_batch work through both frontends
-    if hasattr(engine, "run_batch"):
-        levels = engine.run_batch(roots)
-        seconds = time.perf_counter() - t0      # traversal only, not stats
-        stats = dict(getattr(engine, "last_stats", {}))
-        traversed = (count_traversed_edges(out_deg, levels)
-                     if out_deg is not None else None)
-    else:
-        res = engine.run(roots)
-        seconds = time.perf_counter() - t0
-        levels = res.levels
-        stats = dict(iterations=res.iterations,
-                     edges_inspected=res.edges_inspected,
-                     push_iters=res.push_iters, pull_iters=res.pull_iters)
-        traversed = res.traversed_edges    # paper §VI-A metric
+    # BFSEngine protocol: every engine answers run_batch and records
+    # last_stats — no more sniffing for MultiSourceBFSRunner vs distributed
+    levels = engine.run_batch(roots)
+    seconds = time.perf_counter() - t0      # traversal only, not stats
+    stats = dict(getattr(engine, "last_stats", {}))
+    traversed = stats.pop("traversed_edges", None)
+    if out_deg is not None:
+        traversed = count_traversed_edges(out_deg, levels)
+    stats.pop("seconds", None)
     stats["batch"] = int(roots.size)
     out = dict(levels=levels, seconds=round(seconds, 4), **stats)
     if traversed is not None:

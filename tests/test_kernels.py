@@ -62,6 +62,110 @@ def test_fused_frontier_update_flat_odd_sizes():
 
 
 # ---------------------------------------------------------------------------
+# msbfs_propagate (fused P2->P3 gather/scatter-OR over packed plane words)
+# ---------------------------------------------------------------------------
+
+def _propagate_case(n_rows, nw, m, seed):
+    rng = np.random.default_rng(seed)
+    frontier = rng.integers(0, 2**32, (n_rows, nw), dtype=np.uint32)
+    frontier[-1] = 0                       # trash-row contract
+    seen = rng.integers(0, 2**32, (n_rows, nw), dtype=np.uint32)
+    seen[-1] = 0xFFFFFFFF
+    src = rng.integers(0, n_rows, m, dtype=np.int32)   # duplicates likely
+    tgt = rng.integers(0, n_rows, m, dtype=np.int32)
+    return (jnp.asarray(frontier), jnp.asarray(seen),
+            jnp.asarray(src), jnp.asarray(tgt))
+
+
+@pytest.mark.parametrize("n_rows,nw,m,block", [
+    (33, 1, 64, 64), (65, 2, 128, 32), (129, 1, 256, 256), (17, 3, 96, 16),
+])
+def test_msbfs_propagate_parity(n_rows, nw, m, block):
+    """Kernel vs the jnp per-bit-plane oracle (bitmap._scatter_or_rows)."""
+    from repro.kernels.msbfs_propagate import msbfs_propagate_planes
+    frontier, seen, src, tgt = _propagate_case(n_rows, nw, m, seed=m + nw)
+    got = msbfs_propagate_planes(frontier, seen, src, tgt,
+                                 block_edges=block, interpret=True)
+    want = ref.msbfs_propagate_planes_ref(frontier, seen, src, tgt)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_msbfs_propagate_parity_noninterpret():
+    """Non-interpret arm of the parity harness (TPU-only compile)."""
+    if jax.default_backend() != "tpu":
+        pytest.skip("non-interpret Pallas path needs a TPU backend")
+    from repro.kernels.msbfs_propagate import msbfs_propagate_planes
+    frontier, seen, src, tgt = _propagate_case(65, 1, 128, seed=0)
+    got = msbfs_propagate_planes(frontier, seen, src, tgt,
+                                 block_edges=64, interpret=False)
+    want = ref.msbfs_propagate_planes_ref(frontier, seen, src, tgt)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_msbfs_propagate_wrapper_masks_and_pads():
+    """ops.msbfs_propagate: invalid / OOR edges drop, count is exact, and
+    the scatter-OR matches a per-edge numpy loop (independent oracle)."""
+    rng = np.random.default_rng(5)
+    n, nw, m = 50, 2, 777                  # m not a block multiple
+    frontier = rng.integers(0, 2**32, (n, nw), dtype=np.uint32)
+    seen = rng.integers(0, 2**32, (n, nw), dtype=np.uint32)
+    src = rng.integers(-2, n + 3, m).astype(np.int32)
+    tgt = rng.integers(-2, n + 3, m).astype(np.int32)
+    valid = rng.random(m) < 0.7
+    new, vout, cnt = ops.msbfs_propagate(
+        jnp.asarray(frontier), jnp.asarray(seen), jnp.asarray(src),
+        jnp.asarray(tgt), jnp.asarray(valid), block_edges=128)
+    cand = np.zeros_like(frontier)
+    for e in range(m):
+        if valid[e] and 0 <= src[e] < n and 0 <= tgt[e] < n:
+            cand[tgt[e]] |= frontier[src[e]]
+    want_new = cand & ~seen
+    np.testing.assert_array_equal(np.asarray(new), want_new)
+    np.testing.assert_array_equal(np.asarray(vout), seen | want_new)
+    assert int(cnt) == int(np.unpackbits(want_new.view(np.uint8)).sum())
+
+
+def test_scatter_or_rows_matches_loop():
+    """bitmap._scatter_or_rows (the jnp fallback): duplicates OR together,
+    OOR rows (negative or >= r) drop, existing bits survive."""
+    from repro.core import bitmap
+    rng = np.random.default_rng(11)
+    r, nw, m = 40, 3, 500
+    words = rng.integers(0, 2**32, (r, nw), dtype=np.uint32)
+    idx = rng.integers(-4, r + 6, m).astype(np.int32)
+    msg = rng.integers(0, 2**32, (m, nw), dtype=np.uint32)
+    want = words.copy()
+    for e in range(m):
+        if 0 <= idx[e] < r:
+            want[idx[e]] |= msg[e]
+    got = bitmap._scatter_or_rows(jnp.asarray(words), jnp.asarray(idx),
+                                  jnp.asarray(msg))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_segment_or_rows_matches_loop():
+    """bitmap.segment_or_rows: inclusive segmented OR scan over packed
+    rows (the scan-based pull propagate's reduction primitive)."""
+    from repro.core import bitmap
+    rng = np.random.default_rng(13)
+    e_, nw = 300, 2
+    msg = rng.integers(0, 2**32, (e_, nw), dtype=np.uint32)
+    first = np.zeros(e_, bool)
+    first[np.sort(rng.choice(e_, 25, replace=False))] = True
+    first[0] = True
+    got = np.asarray(bitmap.segment_or_rows(jnp.asarray(msg),
+                                            jnp.asarray(first)))
+    want = np.zeros_like(msg)
+    cur = np.zeros(nw, np.uint32)
+    for e in range(e_):
+        cur = msg[e].copy() if first[e] else (cur | msg[e])
+        want[e] = cur
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
 # csr_gather (HBM reader)
 # ---------------------------------------------------------------------------
 

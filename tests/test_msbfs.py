@@ -80,6 +80,23 @@ def test_fused_frontier_update_batch_odd_widths():
             np.asarray(cnt), np.asarray(bitmap.popcount_rows(c & ~v)))
 
 
+@pytest.mark.parametrize("batch", [1, 33])
+def test_count_traversed_edges_matches_loop(batch):
+    """The vectorized masked-matvec must pin the original per-row loop."""
+    from repro.core import count_traversed_edges
+    from repro.core.bfs_local import INF
+    rng = np.random.default_rng(batch)
+    n = 200
+    out_deg = rng.integers(0, 50, n)
+    levels = np.where(rng.random((batch, n)) < 0.4,
+                      rng.integers(0, 9, (batch, n)), int(INF))
+    want = int(sum(out_deg[levels[i] < int(INF)].sum()
+                   for i in range(batch)))
+    assert count_traversed_edges(out_deg, levels) == want
+    if batch == 1:   # 1-D input (single-source BFSResult.level) still works
+        assert count_traversed_edges(out_deg, levels[0]) == want
+
+
 # ---------------------------------------------------------------------------
 # local MS-BFS engine
 # ---------------------------------------------------------------------------
