@@ -14,6 +14,12 @@ claims are validated on CPU (absolute numbers are CPU figures):
   (``MultiSourceBFSRunner(packed=False)``) — the software re-run of the
   paper's "stream whole bitmap words per memory beat" argument.
 
+The same harness benches the other vertex programs riding the engine
+(packed arm only — the bool-plane baseline is BFS-specific):
+
+  PYTHONPATH=src python -m benchmarks.msbfs_throughput --algo cc \
+      --out BENCH_msbfs_cc.json
+
   PYTHONPATH=src python -m benchmarks.msbfs_throughput
   PYTHONPATH=src python -m benchmarks.msbfs_throughput \
       --out BENCH_msbfs.json --check   # CI: fail if packed is slower
@@ -27,25 +33,36 @@ import sys
 import numpy as np
 
 from benchmarks.common import print_rows, save
-from repro.core import MultiSourceBFSRunner, SchedulerConfig, \
-    build_local_graph
-from repro.graph import get_dataset
+from repro.core import (ConnectedComponentsRunner, MultiSourceBFSRunner,
+                        SSSPRunner, SchedulerConfig, build_local_graph,
+                        get_program)
+from repro.graph import get_dataset, symmetrize_csr
 
 
 def run(graph: str = "rmat16-16", batch_sizes=(1, 2, 4, 8, 16, 32),
         policy: str = "beamer", seed: int = 0, repeats: int = 3,
-        packed_modes=(True, False)) -> dict:
+        packed_modes=(True, False), algo: str = "bfs") -> dict:
+    program = get_program(algo)
     ds = get_dataset(graph)
-    g = build_local_graph(ds.csr, ds.csc)
-    deg = np.diff(ds.csr.indptr)
+    csr, csc = ds.csr, ds.csc
+    if program.undirected:
+        csr = symmetrize_csr(csr)
+        csc = csr            # a symmetrized graph is its own transpose
+    g = build_local_graph(csr, csc)
+    deg = np.diff(csr.indptr)
     rng = np.random.default_rng(seed)
     # roots with non-empty out-lists so every query traverses real work
     roots_all = rng.choice(np.flatnonzero(deg > 0), max(batch_sizes),
                            replace=False).astype(np.int32)
     rows = []
     for packed in packed_modes:
-        runner = MultiSourceBFSRunner(g, SchedulerConfig(policy=policy),
-                                      packed=packed)
+        sched = SchedulerConfig(policy=policy)
+        if algo == "bfs":
+            runner = MultiSourceBFSRunner(g, sched, packed=packed)
+        else:
+            assert packed, "bool-plane baseline exists for BFS only"
+            cls = {"cc": ConnectedComponentsRunner, "sssp": SSSPRunner}[algo]
+            runner = cls(g, sched=sched)
         for b in batch_sizes:
             roots = roots_all[:b]
             runner.run(roots)                   # warm-up / compile
@@ -55,7 +72,8 @@ def run(graph: str = "rmat16-16", batch_sizes=(1, 2, 4, 8, 16, 32),
                 if best is None or res.seconds < best.seconds:
                     best = res
             rows.append(dict(
-                batch=b, packed=packed, seconds=round(best.seconds, 4),
+                batch=b, packed=packed, algo=algo,
+                seconds=round(best.seconds, 4),
                 aggregate_teps=round(best.aggregate_teps, 1),
                 aggregate_gteps=round(best.gteps, 6),
                 teps_per_query=round(best.aggregate_teps / b, 1),
@@ -71,7 +89,7 @@ def run(graph: str = "rmat16-16", batch_sizes=(1, 2, 4, 8, 16, 32),
     for r in rows:
         r["speedup_vs_b1"] = round(
             r["aggregate_teps"] / max(base_by_arm[r["packed"]], 1e-9), 2)
-    out = {"graph": graph, "policy": policy, "rows": rows,
+    out = {"graph": graph, "policy": policy, "algo": algo, "rows": rows,
            "monotonic": all(packed_rows[i]["aggregate_teps"]
                             <= packed_rows[i + 1]["aggregate_teps"]
                             for i in range(len(packed_rows) - 1))}
@@ -97,6 +115,7 @@ def bench_record(out: dict) -> dict:
     return {
         "graph": out["graph"],
         "policy": out["policy"],
+        "algo": out.get("algo", "bfs"),
         "rows": [dict(graph=out["graph"], batch=r["batch"],
                       packed=bool(r["packed"]),
                       aggregate_teps=r["aggregate_teps"])
@@ -108,6 +127,9 @@ def bench_record(out: dict) -> dict:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="rmat16-16")
+    ap.add_argument("--algo", choices=("bfs", "cc", "sssp"), default="bfs",
+                    help="vertex program to bench (cc/sssp run the packed "
+                         "engine arm only)")
     ap.add_argument("--policy", default="beamer")
     ap.add_argument("--batches", type=int, nargs="*",
                     default=[1, 2, 4, 8, 16, 32])
@@ -123,10 +145,19 @@ def main():
     args = ap.parse_args()
     if args.check and args.packed_only:
         ap.error("--check needs both arms; drop --packed-only")
-    modes = (True,) if args.packed_only else (True, False)
+    if args.algo != "bfs":
+        if args.check:
+            ap.error("--check compares against the bool-plane baseline, "
+                     "which exists for --algo bfs only")
+        modes = (True,)      # no bool-plane arm for cc/sssp
+    else:
+        modes = (True,) if args.packed_only else (True, False)
     out = run(graph=args.graph, batch_sizes=tuple(args.batches),
-              policy=args.policy, repeats=args.repeats, packed_modes=modes)
-    save("msbfs_throughput", out)
+              policy=args.policy, repeats=args.repeats, packed_modes=modes,
+              algo=args.algo)
+    name = ("msbfs_throughput" if args.algo == "bfs"
+            else f"msbfs_throughput_{args.algo}")
+    save(name, out)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(bench_record(out), f, indent=2)

@@ -1,14 +1,19 @@
 from repro.core import bitmap
 from repro.core.bfs_local import (BFSEngine, BFSResult, BFSRunner,
-                                  LocalGraph, MSBFSResult,
-                                  MultiSourceBFSRunner, bfs_oracle,
-                                  bfs_reference, build_local_graph,
-                                  count_traversed_edges,
-                                  engine_num_vertices, msbfs_reference,
-                                  validate_roots)
+                                  LocalGraph, bfs_oracle, bfs_reference,
+                                  build_local_graph, count_traversed_edges,
+                                  engine_num_vertices, validate_roots)
 from repro.core.partition import PartitionedGraph, partition_graph
 from repro.core.scheduler import (PULL, PUSH, SchedulerConfig, choose_mode,
                                   choose_mode_host)
+from repro.core.vertex_program import (BFS, CC, PROGRAMS, SSSP,
+                                       ConnectedComponentsRunner,
+                                       MSBFSResult, MultiSourceBFSRunner,
+                                       SSSPRunner, VertexProgram,
+                                       VertexProgramResult,
+                                       VertexProgramRunner,
+                                       component_labels, get_program,
+                                       msbfs_reference, vp_reference)
 
 __all__ = [
     "bitmap", "BFSEngine", "BFSResult", "BFSRunner", "LocalGraph",
@@ -16,5 +21,8 @@ __all__ = [
     "build_local_graph", "count_traversed_edges", "engine_num_vertices",
     "msbfs_reference", "validate_roots", "PartitionedGraph",
     "partition_graph", "PULL", "PUSH", "SchedulerConfig", "choose_mode",
-    "choose_mode_host",
+    "choose_mode_host", "BFS", "CC", "SSSP", "PROGRAMS", "VertexProgram",
+    "VertexProgramResult", "VertexProgramRunner",
+    "ConnectedComponentsRunner", "SSSPRunner", "component_labels",
+    "get_program", "vp_reference",
 ]

@@ -39,6 +39,7 @@ from repro.core.dispatcher import (or_reduce_scatter_flat,
 from repro.core.partition import PartitionedGraph, reindex, unreindex
 from repro.core.scheduler import (PULL, PUSH, SchedulerConfig, choose_mode,
                                   choose_mode_host)
+from repro.core.vertex_program import BFS, VertexProgram
 
 
 @dataclasses.dataclass
@@ -51,12 +52,20 @@ class DistConfig:
 
 
 class DistributedBFS:
-    """BFS engine over `mesh`: Q = d*k vertex shards, k PEs per device."""
+    """Vertex-program engine over `mesh`: Q = d*k shards, k PEs per device.
+
+    The batched path is program-parameterized (``run_program_batch``):
+    the default ``program`` (BFS unless overridden at construction) keeps
+    ``run_batch`` protocol-uniform, so one ``DistributedBFS(pg, mesh,
+    program=CC)`` serves CC through the same ``BFSEngine`` surface.
+    """
 
     def __init__(self, pg: PartitionedGraph, mesh: jax.sharding.Mesh,
                  axis_names: tuple[str, ...] | None = None,
-                 cfg: DistConfig | None = None):
+                 cfg: DistConfig | None = None,
+                 program: VertexProgram = BFS):
         self.pg = pg
+        self.program = program
         self.mesh = mesh
         self.axes = tuple(axis_names or mesh.axis_names)
         self.axis_sizes = tuple(mesh.shape[a] for a in self.axes)
@@ -79,14 +88,28 @@ class DistributedBFS:
         self.in_indices = put(pg.in_indices)
         # stored per-shard degrees: the per-level scheduler stats would
         # otherwise re-derive them with jnp.diff every single iteration
-        self.out_deg = put(np.diff(pg.out_indptr, axis=1).astype(np.int32))
-        self.in_deg = put(np.diff(pg.in_indptr, axis=1).astype(np.int32))
+        out_deg_r = np.diff(pg.out_indptr, axis=1)
+        self._out_deg_dev = put(out_deg_r.astype(np.int32))
+        self._in_deg_dev = put(np.diff(pg.in_indptr, axis=1).astype(np.int32))
+        # original-order degrees for the engine protocol (per-wave TEPS)
+        gidx = np.arange(self.n_pad)
+        orig = (unreindex(gidx, q, self.vl) if pg.scheme == "hash" else gidx)
+        deg = np.zeros(pg.num_vertices, np.int64)
+        ok = orig < pg.num_vertices
+        deg[orig[ok]] = out_deg_r.reshape(-1)[ok]
+        self._out_deg_np = deg
         self._steps = {}
 
     @property
     def num_vertices(self) -> int:
         """|V| served (the :class:`repro.core.BFSEngine` protocol)."""
         return int(self.pg.num_vertices)
+
+    @property
+    def out_deg(self) -> np.ndarray | None:
+        """Original-order out-degrees [n] (engine protocol), or None for
+        ``abstract()`` spec-only engines with no materialized graph."""
+        return self._out_deg_np
 
     @classmethod
     def abstract(cls, mesh: jax.sharding.Mesh, num_vertices: int,
@@ -98,6 +121,8 @@ class DistributedBFS:
         ShapeDtypeStruct inputs (see abstract_inputs)."""
         self = cls.__new__(cls)
         self.pg = None
+        self.program = BFS
+        self._out_deg_np = None
         self.mesh = mesh
         self.axes = tuple(axis_names or mesh.axis_names)
         self.axis_sizes = tuple(mesh.shape[a] for a in self.axes)
@@ -324,7 +349,8 @@ class DistributedBFS:
             in_specs=(sp, sp, sp, sp),
             out_specs=P()))
 
-    def _push_batch_fn(self, budget: int, nb: int):
+    def _push_batch_fn(self, budget: int, nb: int,
+                       program: VertexProgram = BFS):
         cfg, axes, sizes = self.cfg, self.axes, self.axis_sizes
         vl, n_pad = self.vl, self.n_pad
         d, k = self.d, self.k
@@ -355,8 +381,8 @@ class DistributedBFS:
             cand_local = cand_dev.reshape(k, vl, nwb)
             new = cand_local & ~seen
             s2 = seen | new
-            new_mask = bitmap.unpack_rows(new, nb)         # level update
-            lev2 = jnp.where(new_mask, lvl + 1, level)
+            new_mask = bitmap.unpack_rows(new, nb)         # program apply
+            lev2 = program.commit(level, new_mask, lvl)
             statvec = self._ms_statvec_b(
                 new, s2, out_deg, in_deg,
                 jax.lax.psum(jnp.sum(total), axes), overflow, nb)
@@ -368,7 +394,8 @@ class DistributedBFS:
             in_specs=(sp, sp, sp, P(), sp, sp, sp, sp),
             out_specs=(sp, sp, sp, P())))
 
-    def _pull_batch_fn(self, budget: int, nb: int):
+    def _pull_batch_fn(self, budget: int, nb: int,
+                       program: VertexProgram = BFS):
         axes, vl, nwb = self.axes, self.vl, bitmap.num_words(nb)
 
         def pull_b(frontier, seen, level, lvl, in_indptr, in_indices,
@@ -394,8 +421,8 @@ class DistributedBFS:
                 jnp.where(valid, child, vl), msg)
             new = cand_w & ~seen
             s2 = seen | new
-            new_mask = bitmap.unpack_rows(new, nb)         # level update
-            lev2 = jnp.where(new_mask, lvl + 1, level)
+            new_mask = bitmap.unpack_rows(new, nb)         # program apply
+            lev2 = program.commit(level, new_mask, lvl)
             statvec = self._ms_statvec_b(
                 new, s2, out_deg, in_deg,
                 jax.lax.psum(jnp.sum(total), axes), overflow, nb)
@@ -407,8 +434,9 @@ class DistributedBFS:
             in_specs=(sp, sp, sp, P(), sp, sp, sp, sp),
             out_specs=(sp, sp, sp, P())))
 
-    def _get(self, kind: str, budget: int, nb: int = 0):
-        key = (kind, budget, nb)
+    def _get(self, kind: str, budget: int, nb: int = 0,
+             program: VertexProgram = BFS):
+        key = (kind, budget, nb, program.name)
         if key not in self._steps:
             if kind == "push":
                 self._steps[key] = self._push_fn(budget)
@@ -419,9 +447,9 @@ class DistributedBFS:
             elif kind == "drain":
                 self._steps[key] = self._queue_drain_fn()
             elif kind == "push_b":
-                self._steps[key] = self._push_batch_fn(budget, nb)
+                self._steps[key] = self._push_batch_fn(budget, nb, program)
             elif kind == "pull_b":
-                self._steps[key] = self._pull_batch_fn(budget, nb)
+                self._steps[key] = self._pull_batch_fn(budget, nb, program)
             elif kind == "stats_b":
                 self._steps[key] = self._stats_batch_fn(nb)
         return self._steps[key]
@@ -511,19 +539,33 @@ class DistributedBFS:
         return out
 
     def run_batch(self, roots, max_iters: int | None = None):
-        """Batched MS-BFS from original-ID ``roots``.
+        """Batched vertex program from original-ID ``roots`` (the engine's
+        construction-time ``program``; BFS by default).
 
-        Returns level int32[B, num_vertices].  All B traversals run level-
-        synchronously over the same sharded graph; every CSR/CSC edge read
-        and every crossbar exchange carries the whole batch's source masks
-        (bitmap dispatch only — FIFO queues carry scalar vertex IDs and
-        would lose the sharing).
+        Returns value rows int32[B, num_vertices].  All B planes run
+        level-synchronously over the same sharded graph; every CSR/CSC
+        edge read and every crossbar exchange carries the whole batch's
+        plane masks (bitmap dispatch only — FIFO queues carry scalar
+        vertex IDs and would lose the sharing).
+        """
+        return self.run_program_batch(self.program, roots, max_iters)
+
+    def run_program_batch(self, program: VertexProgram, roots,
+                          max_iters: int | None = None):
+        """One-sync-per-level batched driver, parameterized by program.
+
+        The SHARED distributed entry: root validation happens here, once,
+        for every algorithm.
         """
         pg, cfg = self.pg, self.cfg
         if cfg.dispatch != "bitmap":
             raise NotImplementedError(
                 "run_batch supports bitmap dispatch only: FIFO queues carry "
                 "scalar vertex IDs, not per-source masks")
+        if program.combine != "or":
+            raise NotImplementedError(
+                "the distributed crossbar is an OR-reduce-scatter; "
+                f"program {program.name!r} wants combine={program.combine!r}")
         # validate BEFORE the int64 cast (a float root must error, not
         # truncate); duplicates are allowed — one plane slot each
         roots = validate_roots(np.asarray(roots),
@@ -538,14 +580,14 @@ class DistributedBFS:
         # scheduler stats as ONE replicated int32[7]; the loop's only
         # blocking device->host transfer per level is that vector.
         sv = np.asarray(self._get("stats_b", 0, b)(
-            frontier, seen, self.out_deg, self.in_deg))
+            frontier, seen, self._out_deg_dev, self._in_deg_dev))
         budget = cfg.edge_budget
         mode = PUSH
         iters = 0
         inspected = 0
         push_iters = pull_iters = 0
         max_iters = max_iters or self.n_pad
-        while iters < max_iters and int(sv[SV_NF]) > 0:
+        while iters < max_iters and not program.done(sv):
             mode = choose_mode_host(cfg.scheduler, mode, int(sv[SV_NF]),
                                     int(sv[SV_MF]), int(sv[SV_MU]),
                                     pg.num_vertices, int(sv[SV_NU]))
@@ -558,8 +600,9 @@ class DistributedBFS:
                 arrays = ((self.out_indptr, self.out_indices) if is_push
                           else (self.in_indptr, self.in_indices))
                 (frontier2, seen2, level2, statvec) = self._get(
-                    kind, budget, b)(frontier, seen, level, np.int32(iters),
-                                     *arrays, self.out_deg, self.in_deg)
+                    kind, budget, b, program)(
+                    frontier, seen, level, np.int32(iters), *arrays,
+                    self._out_deg_dev, self._in_deg_dev)
                 sv = np.asarray(statvec)
                 if int(sv[SV_OVERFLOW]) == 0:
                     break
@@ -579,7 +622,7 @@ class DistributedBFS:
         out[:, orig[ok]] = lev[ok].T
         self.last_stats = dict(iterations=iters, edges_inspected=inspected,
                                push_iters=push_iters, pull_iters=pull_iters,
-                               batch=b)
+                               batch=b, algo=program.name)
         return out
 
 

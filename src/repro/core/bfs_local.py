@@ -12,15 +12,13 @@ Two execution paths:
   counts *inspected edges* per mode, which is what the paper's Fig. 8/10
   comparisons measure, and drives GTEPS benchmarks.
 
-Packed-word invariant (MS-BFS): frontier/seen/candidate state is packed
-uint32 plane words end to end — plane state never unpacks between P1 and
-the level update.  The paper earns its GTEPS by streaming whole 256/512-bit
-bitmap words per HBM beat; the software analogue is that every step
-gathers, ORs and commits uint32 source-mask words directly (Pallas
-``msbfs_propagate`` kernel or the ``bitmap._scatter_or_rows`` /
-``bitmap.segment_or_rows`` jnp fallbacks), and each level pays exactly ONE
-blocking device->host transfer: a stacked int32 stats vector fused into
-the step itself.
+The batched multi-source engines (MS-BFS, CC, SSSP) live in
+``repro.core.vertex_program``; this module provides the shared primitives
+they build on (``LocalGraph``, ``compact_indices``, ``expand_edges``, the
+``SV_*`` statvec layout, ``validate_roots``) plus the single-source
+pipeline.  Both drivers share the one-sync-per-level protocol: every step
+returns a stacked int32 stats vector fused into the step itself, so each
+level pays exactly ONE blocking device->host transfer.
 """
 from __future__ import annotations
 
@@ -34,8 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitmap
-from repro.core.scheduler import (PULL, PUSH, SchedulerConfig, choose_mode,
-                                  choose_mode_host)
+from repro.core.scheduler import PUSH, SchedulerConfig, choose_mode_host
 from repro.graph.csr import CSRGraph, edge_sources
 
 INF = jnp.int32(2 ** 30)
@@ -286,6 +283,11 @@ class BFSRunner:
     def num_vertices(self) -> int:
         return int(self.g.n)
 
+    @property
+    def out_deg(self) -> np.ndarray:
+        """Out-degrees [n] (the engine protocol's TEPS numerator input)."""
+        return self._out_deg_np
+
     def _fetch(self, arr) -> np.ndarray:
         self._transfers += 1
         return np.asarray(arr)
@@ -344,441 +346,34 @@ class BFSRunner:
 
 
 # ---------------------------------------------------------------------------
-# Batched multi-source BFS (MS-BFS): B concurrent traversals over one graph.
-#
-# Frontier/seen state is a per-vertex SOURCE mask — bit b of row v says
-# "source b has reached v" — packed into uint32[n_pad, ceil(B/32)] words
-# (bitmap.pack_rows).  Every CSR/CSC edge read is shared by the whole batch:
-# propagating along an edge is one 32/64-bit OR instead of B separate
-# traversals, the software analogue of keeping all HBM pseudo-channels busy
-# with concurrent queries (GraphScale; Then et al., VLDB'14).
-#
-# The packed words are the ONLY state representation: push gathers the
-# frontier words of budgeted edges and scatter-ORs them into candidate
-# words (Pallas msbfs_propagate / bitmap._scatter_or_rows); pull reduces
-# each vertex's in-list with a segmented OR-scan over the CSC edge stream
-# (bitmap.segment_or_rows) — no unpack, no bool plane arrays, no scatter.
+# Batched multi-source traversal (MS-BFS and friends) lives in
+# ``repro.core.vertex_program``: the packed plane exchange, the hybrid
+# scheduler loop and the one-sync-per-level statvec protocol were factored
+# into a generic vertex-program engine there (BFS / CC / SSSP
+# instantiations).  This module keeps the single-source pipeline plus the
+# shared primitives the engine builds on (LocalGraph, compact_indices,
+# expand_edges, the statvec layout, validate_roots).
 # ---------------------------------------------------------------------------
-
-def _ms_init(g: LocalGraph, roots: jax.Array):
-    b = roots.shape[0]
-    planes = jnp.zeros((g.n_pad, b), jnp.bool_)
-    planes = planes.at[roots, jnp.arange(b)].set(True)
-    frontier = bitmap.pack_rows(planes)
-    level = jnp.full((g.n_pad, b), INF, jnp.int32)
-    level = level.at[roots, jnp.arange(b)].set(0)
-    return frontier, frontier, level
-
-
-@jax.jit
-def _ms_init_state(g: LocalGraph, roots: jax.Array):
-    frontier, seen, level = _ms_init(g, roots)
-    return (frontier, seen, level,
-            _ms_statvec(g, frontier, seen, 0, 0, roots.shape[0]))
-
-
-def _ms_statvec(g: LocalGraph, new_w, seen_w, total, overflow, nb: int):
-    """Fused per-level MS-BFS stats: scheduler inputs for the NEXT level,
-    this step's edge total/overflow, and the discovery popcount, stacked
-    into one int32[7] so the driver fetches a single array per level.
-
-    ``nb`` is the TRUE batch size: the pad planes of the last source word
-    are unseen by construction, so masking with the padded width would
-    make every vertex count as "unseen by some source" forever."""
-    pmask = bitmap.plane_mask(nb)
-    any_f = bitmap.any_rows(new_w)
-    un_any = bitmap.any_rows(~seen_w & pmask)
-    return jnp.stack([
-        jnp.sum(any_f, dtype=jnp.int32),
-        jnp.sum(jnp.where(any_f, g.out_deg, 0), dtype=jnp.int32),
-        jnp.sum(jnp.where(un_any, g.in_deg, 0), dtype=jnp.int32),
-        jnp.sum(un_any, dtype=jnp.int32),
-        jnp.asarray(total, jnp.int32),
-        jnp.asarray(overflow, jnp.int32),
-        bitmap.popcount(new_w),
-    ])
-
-
-def _ms_commit(g: LocalGraph, new_w, seen_w, level, lvl, total, overflow):
-    """Level update (the pipeline's single unpack point) + fused stats."""
-    new_mask = bitmap.unpack_rows(new_w, level.shape[1])
-    level2 = jnp.where(new_mask, lvl + 1, level)
-    return level2, _ms_statvec(g, new_w, seen_w, total, overflow,
-                               level.shape[1])
-
-
-def _propagate_edges(g: LocalGraph, frontier_w, seen_w, src, tgt, valid,
-                     use_pallas: bool):
-    """Fused P2->P3 on packed words: cand[tgt] |= frontier[src], then
-    new = cand & ~seen, seen |= new.  Pallas kernel or jnp fallback."""
-    if use_pallas:
-        from repro.kernels import ops as kops
-        new, seen2, _ = kops.msbfs_propagate(frontier_w, seen_w, src, tgt,
-                                             valid)
-        return new, seen2
-    msg = frontier_w[jnp.maximum(src, 0)]
-    cand = bitmap._scatter_or_rows(
-        jnp.zeros_like(frontier_w), jnp.where(valid, tgt, g.n_pad), msg)
-    new = cand & ~seen_w
-    return new, seen_w | new
-
-
-def _propagate_pull_scan(g: LocalGraph, frontier_w):
-    """Candidate plane words for ALL vertices via the CSC edge stream:
-    cand[v] = OR of frontier[parent] over v's in-list.  The edges are
-    already grouped by child, so a segmented OR-scan + one gather at the
-    segment ends replaces the scatter entirely (packed words throughout)."""
-    if g.in_indices.shape[0] == 0:
-        return jnp.zeros_like(frontier_w)
-    msg = frontier_w[g.in_indices]                  # [E, nw] packed gather
-    scan = bitmap.segment_or_rows(msg, g.in_seg_first)
-    return jnp.where((g.in_seg_end >= 0)[:, None],
-                     scan[jnp.maximum(g.in_seg_end, 0)], jnp.uint32(0))
-
-
-def _ms_dense_step(g: LocalGraph, frontier_w):
-    """One batched level expansion; returns candidate plane words.
-
-    Pull-form of the edge-parallel candidate set (identical result to the
-    push-form scatter: cand[v] = OR of frontier over v's in-neighbors)."""
-    return _propagate_pull_scan(g, frontier_w)
-
-
-def msbfs_reference(g: LocalGraph, roots, max_iters: int | None = None):
-    """Fully-jit dense MS-BFS loop (packed words).  Returns level [B, n]."""
-    roots = jnp.asarray(roots, jnp.int32)
-    max_iters = max_iters or g.n_pad
-    frontier0, seen0, level0 = _ms_init(g, roots)
-
-    def cond(state):
-        frontier, seen, level, lvl = state
-        return (bitmap.popcount(frontier) > 0) & (lvl < max_iters)
-
-    def body(state):
-        frontier, seen, level, lvl = state
-        cand = _ms_dense_step(g, frontier)
-        new = cand & ~seen
-        seen = seen | new
-        new_mask = bitmap.unpack_rows(new, roots.shape[0])
-        level = jnp.where(new_mask, lvl + 1, level)
-        return new, seen, level, lvl + 1
-
-    frontier, seen, level, lvl = jax.lax.while_loop(
-        cond, body, (frontier0, seen0, level0, jnp.int32(0)))
-    return level[: g.n].T
-
-
-@partial(jax.jit, static_argnames=("budget", "use_pallas"))
-def ms_push_step(g: LocalGraph, frontier_w, seen_w, level, lvl, budget: int,
-                 use_pallas: bool = False):
-    """Batched push on packed words: expand out-lists of any-source
-    frontier vertices; each budgeted edge carries its endpoint's packed
-    source-mask word straight into the candidate planes (fused P2->P3)."""
-    any_f = bitmap.any_rows(frontier_w)
-    active, _ = compact_indices(any_f, g.n_pad)
-    src, nbr, valid, total = expand_edges(active, g.out_indptr,
-                                          g.out_indices, budget)
-    new, seen2 = _propagate_edges(g, frontier_w, seen_w, src, nbr, valid,
-                                  use_pallas)
-    level2, statvec = _ms_commit(g, new, seen2, level, lvl, total,
-                                 total > budget)
-    return new, seen2, level2, statvec
-
-
-@partial(jax.jit, static_argnames=("budget", "use_pallas"))
-def ms_pull_step(g: LocalGraph, frontier_w, seen_w, level, lvl,
-                 budget: int = 0, use_pallas: bool = False):
-    """Batched pull on packed words.
-
-    Default path: dense segmented OR-scan over the whole CSC edge stream
-    (never overflows, no budget).  Pallas path: budgeted expansion of
-    some-source-unseen vertices through the fused propagate kernel."""
-    if use_pallas:
-        un_any = bitmap.any_rows(
-            ~seen_w & bitmap.plane_mask(level.shape[1]))
-        active, _ = compact_indices(un_any, g.n_pad)
-        child, parent, valid, total = expand_edges(
-            active, g.in_indptr, g.in_indices, budget)
-        new, seen2 = _propagate_edges(g, frontier_w, seen_w, parent, child,
-                                      valid, True)
-        overflow = total > budget
-    else:
-        cand = _propagate_pull_scan(g, frontier_w)
-        new = cand & ~seen_w
-        seen2 = seen_w | new
-        total = jnp.int32(g.in_indices.shape[0])
-        overflow = jnp.int32(0)
-    level2, statvec = _ms_commit(g, new, seen2, level, lvl, total, overflow)
-    return new, seen2, level2, statvec
-
-
-# ---------------------------------------------------------------------------
-# Legacy bool-plane steps — the pre-packed-pipeline implementation, kept as
-# the differential/benchmark baseline (`MultiSourceBFSRunner(packed=False)`,
-# the "packed: off" rows of benchmarks/msbfs_throughput.py).
-# ---------------------------------------------------------------------------
-
-def _p3_update_ms(cand_w, seen_w, use_pallas: bool):
-    """Batched P3: fused per-plane Pallas kernel or plain jnp."""
-    if use_pallas:
-        from repro.kernels import ops as kops
-        new_t, seen_t, _ = kops.fused_frontier_update_batch(
-            cand_w.T, seen_w.T)       # planes-major for the kernel grid
-        return new_t.T, seen_t.T
-    new = cand_w & ~seen_w
-    return new, seen_w | new
-
-
-@partial(jax.jit, static_argnames=("budget", "use_pallas"))
-def _boolplane_push_step(g: LocalGraph, frontier_w, seen_w, budget: int,
-                         use_pallas: bool = False):
-    """Bool-plane push: unpacks the whole frontier, builds a [budget, B]
-    bool message array and a [n_pad+1, nb] bool scatter buffer per level."""
-    nb = frontier_w.shape[1] * bitmap.WORD_BITS
-    fmask = bitmap.unpack_rows(frontier_w)            # [n_pad, B']
-    any_f = bitmap.any_rows(frontier_w)
-    active, _ = compact_indices(any_f, g.n_pad)
-    src, nbr, valid, total = expand_edges(active, g.out_indptr,
-                                          g.out_indices, budget)
-    msg = fmask[jnp.maximum(src, 0)] & valid[:, None]  # [budget, B']
-    tgt = jnp.where(valid, nbr, g.n_pad)
-    cand = jnp.zeros((g.n_pad + 1, nb), jnp.bool_)
-    cand = cand.at[tgt].max(msg, mode="drop")[:-1]
-    cand_w = bitmap.pack_rows(cand)
-    new, seen2 = _p3_update_ms(cand_w, seen_w, use_pallas)
-    return new, seen2, total, total > budget
-
-
-@partial(jax.jit, static_argnames=("budget", "use_pallas"))
-def _boolplane_pull_step(g: LocalGraph, frontier_w, seen_w, budget: int,
-                         use_pallas: bool = False):
-    """Bool-plane pull: vertices unseen by SOME source read their in-lists
-    once and OR their parents' frontier masks (via bool plane arrays)."""
-    nb = frontier_w.shape[1] * bitmap.WORD_BITS
-    pmask = bitmap.plane_mask(nb)
-    fmask = bitmap.unpack_rows(frontier_w)
-    un_any = bitmap.any_rows(~seen_w & pmask)
-    active, _ = compact_indices(un_any, g.n_pad)
-    child, parent, valid, total = expand_edges(active, g.in_indptr,
-                                               g.in_indices, budget)
-    msg = fmask[jnp.maximum(parent, 0)] & valid[:, None]
-    tgt = jnp.where(valid, child, g.n_pad)
-    cand = jnp.zeros((g.n_pad + 1, nb), jnp.bool_)
-    cand = cand.at[tgt].max(msg, mode="drop")[:-1]
-    cand_w = bitmap.pack_rows(cand)
-    new, seen2 = _p3_update_ms(cand_w, seen_w, use_pallas)
-    return new, seen2, total, total > budget
-
-
-@jax.jit
-def _ms_iter_stats(g: LocalGraph, frontier_w, seen_w):
-    nb = frontier_w.shape[1] * bitmap.WORD_BITS
-    pmask = bitmap.plane_mask(nb)
-    any_f = bitmap.any_rows(frontier_w)
-    un_any = bitmap.any_rows(~seen_w & pmask)
-    n_f = jnp.sum(any_f, dtype=jnp.int32)
-    m_f = jnp.sum(jnp.where(any_f, g.out_deg, 0), dtype=jnp.int32)
-    m_u = jnp.sum(jnp.where(un_any, g.in_deg, 0), dtype=jnp.int32)
-    n_u = jnp.sum(un_any, dtype=jnp.int32)
-    return n_f, m_f, m_u, n_u
-
-
-@dataclasses.dataclass
-class MSBFSResult:
-    levels: np.ndarray          # int32[B, n] — one level row per source
-    batch: int
-    iterations: int
-    # edges actually streamed per level.  NOTE: the packed pipeline's
-    # scan-based pull reads the WHOLE CSC edge stream per pull level
-    # (that is its cost model), so this is not comparable edge-for-edge
-    # with the budgeted bool-plane baseline's m_u-bounded pulls.
-    edges_inspected: int
-    push_iters: int
-    pull_iters: int
-    traversed_edges: int        # summed over all sources (paper §VI-A metric)
-    seconds: float
-    host_transfers: int = 0     # blocking device->host fetches during run
-
-    @property
-    def aggregate_teps(self) -> float:
-        return self.traversed_edges / max(self.seconds, 1e-12)
-
-    @property
-    def gteps(self) -> float:
-        return self.aggregate_teps / 1e9
-
-
-class MultiSourceBFSRunner:
-    """Python-driven hybrid MS-BFS over a batch of roots (query engine).
-
-    The per-iteration structure matches ``BFSRunner`` (stats -> mode ->
-    gather/scan step -> P3) with all three bitmaps widened to one bit-plane
-    per source; direction choice uses any-source frontier /
-    any-source-unseen statistics.
-
-    ``packed=True`` (default) runs the packed-word pipeline: plane state
-    never unpacks between P1 and the level update, and each level costs
-    exactly one blocking device->host transfer (the fused stats vector).
-    ``packed=False`` preserves the pre-packed bool-plane implementation as
-    a differential/benchmark baseline.
-    """
-
-    def __init__(self, g: LocalGraph, sched: SchedulerConfig | None = None,
-                 init_budget: int = 1 << 15, use_pallas: bool = False,
-                 packed: bool = True):
-        self.g = g
-        self.sched = sched or SchedulerConfig()
-        self.init_budget = init_budget
-        self.use_pallas = use_pallas
-        self.packed = packed
-        self._transfers = 0
-        self.last_stats: dict = {}
-        # fetched once here so the GTEPS accounting after each run is not
-        # an extra (uncounted) device->host transfer
-        self._out_deg_np = np.asarray(g.out_deg)[: g.n]
-
-    @property
-    def num_vertices(self) -> int:
-        return int(self.g.n)
-
-    def _fetch(self, arr) -> np.ndarray:
-        self._transfers += 1
-        return np.asarray(arr)
-
-    def run(self, roots) -> MSBFSResult:
-        g = self.g
-        # validate BEFORE the int32 cast: a >= 2**31 root must error, not wrap
-        roots = validate_roots(np.asarray(roots), g.n).astype(np.int32)
-        self._transfers = 0
-        if not self.packed:
-            return self._run_boolplane(roots)
-        b = int(roots.size)
-        t0 = time.perf_counter()
-        frontier, seen, level, statvec = _ms_init_state(g, jnp.asarray(roots))
-        sv = self._fetch(statvec)
-        mode = PUSH
-        lvl = 0
-        inspected = 0
-        push_iters = pull_iters = 0
-        budget = min(self.init_budget,
-                     max(g.out_indices.shape[0], g.in_indices.shape[0]) + 1)
-        while int(sv[SV_NF]) > 0:
-            mode = choose_mode_host(self.sched, mode, int(sv[SV_NF]),
-                                    int(sv[SV_MF]), int(sv[SV_MU]), g.n,
-                                    int(sv[SV_NU]))
-            # the scan-based pull is dense over the CSC edge stream: only
-            # push (and the budgeted Pallas pull) need an edge budget
-            budgeted = mode == PUSH or self.use_pallas
-            if budgeted:
-                need = int(sv[SV_MF]) if mode == PUSH else int(sv[SV_MU])
-                cap = (g.out_indices if mode == PUSH
-                       else g.in_indices).shape[0]
-                while budget < min(need, cap + 1):
-                    budget *= 2
-            step = ms_push_step if mode == PUSH else ms_pull_step
-            # retry from the PRE-step seen: an overflowed (truncated) step
-            # may have committed a partial discovery set
-            state0 = (frontier, seen, level)
-            frontier, seen, level, statvec = step(
-                g, *state0, np.int32(lvl), budget if budgeted else 0,
-                self.use_pallas)
-            sv = self._fetch(statvec)
-            while budgeted and bool(sv[SV_OVERFLOW]):
-                budget *= 2            # HBM-reader queue overflow: deepen
-                frontier, seen, level, statvec = step(
-                    g, *state0, np.int32(lvl), budget, self.use_pallas)
-                sv = self._fetch(statvec)
-            lvl += 1
-            inspected += int(sv[SV_TOTAL])
-            if mode == PUSH:
-                push_iters += 1
-            else:
-                pull_iters += 1
-        level.block_until_ready()
-        dt = time.perf_counter() - t0
-        levels = self._fetch(level[: g.n]).T       # [B, n]
-        return self._result(levels, b, lvl, inspected, push_iters,
-                            pull_iters, dt)
-
-    def _run_boolplane(self, roots: np.ndarray) -> MSBFSResult:
-        """Pre-packed-pipeline driver (bool planes + per-scalar syncs)."""
-        g = self.g
-        b = int(roots.size)
-        frontier, seen, level = _ms_init(g, jnp.asarray(roots))
-        mode = jnp.int32(PUSH)
-        lvl = 0
-        inspected = 0
-        push_iters = pull_iters = 0
-        budget = self.init_budget
-        t0 = time.perf_counter()
-        while True:
-            n_f, m_f, m_u, n_u = _ms_iter_stats(g, frontier, seen)
-            n_f, m_f, m_u, n_u = (self._fetch(n_f), self._fetch(m_f),
-                                  self._fetch(m_u), self._fetch(n_u))
-            if int(n_f) == 0:
-                break
-            mode = choose_mode(self.sched, mode, n_f, m_f, m_u, g.n, n_u)
-            is_push = int(self._fetch(mode)) == PUSH  # another per-level sync
-            step = (_boolplane_push_step if is_push
-                    else _boolplane_pull_step)
-            need = int(m_f) if is_push else int(m_u)
-            while budget < min(need, g.out_indices.shape[0] + 1):
-                budget *= 2
-            seen0 = seen
-            new, seen, total, overflow = step(g, frontier, seen0, budget,
-                                              self.use_pallas)
-            while bool(self._fetch(overflow)):
-                budget *= 2
-                new, seen, total, overflow = step(g, frontier, seen0,
-                                                  budget, self.use_pallas)
-            new_mask = bitmap.unpack_rows(new, b)
-            level = jnp.where(new_mask, lvl + 1, level)
-            frontier = new
-            lvl += 1
-            inspected += int(self._fetch(total))
-            if is_push:
-                push_iters += 1
-            else:
-                pull_iters += 1
-        level.block_until_ready()
-        dt = time.perf_counter() - t0
-        levels = self._fetch(level[: g.n]).T       # [B, n]
-        return self._result(levels, b, lvl, inspected, push_iters,
-                            pull_iters, dt)
-
-    def _result(self, levels, b, lvl, inspected, push_iters, pull_iters,
-                dt) -> MSBFSResult:
-        traversed = count_traversed_edges(self._out_deg_np, levels)
-        res = MSBFSResult(levels=levels, batch=b, iterations=lvl,
-                          edges_inspected=inspected, push_iters=push_iters,
-                          pull_iters=pull_iters, traversed_edges=traversed,
-                          seconds=dt, host_transfers=self._transfers)
-        self.last_stats = dict(
-            iterations=res.iterations, edges_inspected=res.edges_inspected,
-            push_iters=res.push_iters, pull_iters=res.pull_iters,
-            batch=res.batch, traversed_edges=res.traversed_edges,
-            seconds=res.seconds, host_transfers=res.host_transfers)
-        return res
-
-    def run_batch(self, roots) -> np.ndarray:
-        """:class:`BFSEngine` entry: levels [B, n] + ``last_stats``."""
-        return self.run(roots).levels
-
 
 @runtime_checkable
 class BFSEngine(Protocol):
     """Minimal contract the serving layers rely on.
 
-    Any batched BFS query engine exposes the number of vertices of its
-    resident graph and answers a batch of root queries with a levels
-    matrix; per-run counters land in ``last_stats``.  Both
-    :class:`MultiSourceBFSRunner` and ``DistributedBFS`` satisfy this —
+    Any batched vertex-program query engine exposes the number of vertices
+    of its resident graph, its out-degree array (the per-wave TEPS
+    numerator — serving layers no longer sniff ``.g.out_deg``), and
+    answers a batch of root queries with a value-rows matrix; per-run
+    counters land in ``last_stats``.  ``VertexProgramRunner`` (and its
+    BFS/CC/SSSP subclasses) and ``DistributedBFS`` all satisfy this —
     ``launch.dynbatch`` / ``launch.serve`` program against it instead of
     duck-typing on ``.g`` / ``.pg``.
     """
 
     @property
     def num_vertices(self) -> int: ...
+
+    @property
+    def out_deg(self) -> "np.ndarray | None": ...
 
     def run_batch(self, roots) -> np.ndarray: ...
 

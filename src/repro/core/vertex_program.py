@@ -1,0 +1,667 @@
+"""Batched vertex-program engine: the MS-BFS pipeline, generalized.
+
+ScalaBFS's arbiter/apply/scatter pipeline is not BFS-specific — GraphScale
+and fpgagraphlib-style frameworks run BFS, CC, SSSP and PageRank through
+one scatter/apply skeleton with per-algorithm apply logic.  This module is
+the software analogue: the level loop, the packed uint32 plane exchange,
+the hybrid push/pull scheduler and the one-sync-per-level statvec protocol
+are shared machinery, parameterized by a :class:`VertexProgram` bundle:
+
+* ``init(g, roots) -> (frontier, seen, value)`` — seed one bit-plane per
+  root plus the per-vertex value array the program accumulates into.
+* ``commit(value, new_mask, lvl) -> value`` — the per-level apply: how a
+  newly-discovered (vertex, plane) updates the value array (BFS/CC set the
+  level on first reach; SSSP takes a min-plus relaxation).
+* ``combine`` — the plane merge op the fused propagate kernel and the
+  distributed OR-reduce-scatter use ("or" for bit-planes; the kernel also
+  implements "max" as the hook for payload planes — see
+  ``kernels.msbfs_propagate``).
+* ``done(statvec) -> bool`` — the convergence predicate, folded into the
+  stacked per-level stats vector (no extra device round-trip).
+
+The bit-plane trick transfers directly: a plane can carry a component seed
+(CC) or a source id (SSSP hop-distance frontiers) just as well as a BFS
+source, so every CSR/CSC edge read keeps serving the whole batch — the
+software analogue of keeping all 32 HBM pseudo-channels busy.
+
+Shipped instantiations: :class:`MultiSourceBFSRunner` (BFS, plus the
+legacy bool-plane baseline), :class:`ConnectedComponentsRunner` (multi-
+seed CC over the symmetrized graph) and :class:`SSSPRunner` (batched
+unit-weight shortest-path hop distances).  All three inherit the packed-
+word invariant (plane state never unpacks between P1 and the commit) and
+the one-sync-per-level driver (``host_transfers == iterations + 2``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitmap
+from repro.core.bfs_local import (INF, SV_MF, SV_MU, SV_NF, SV_NU,
+                                  SV_OVERFLOW, SV_TOTAL, LocalGraph,
+                                  compact_indices, count_traversed_edges,
+                                  expand_edges, validate_roots)
+from repro.core.scheduler import (PUSH, SchedulerConfig, choose_mode,
+                                  choose_mode_host)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm bundles
+# ---------------------------------------------------------------------------
+
+def plane_seed_init(g: LocalGraph, roots: jax.Array):
+    """Shared init: one bit-plane per root, value INF except 0 at the root.
+
+    ``value`` is int32[n_pad, B] — levels for BFS/CC, hop distances for
+    SSSP.  Frontier and seen start identical (the roots themselves).
+    """
+    b = roots.shape[0]
+    planes = jnp.zeros((g.n_pad, b), jnp.bool_)
+    planes = planes.at[roots, jnp.arange(b)].set(True)
+    frontier = bitmap.pack_rows(planes)
+    value = jnp.full((g.n_pad, b), INF, jnp.int32)
+    value = value.at[roots, jnp.arange(b)].set(0)
+    return frontier, frontier, value
+
+
+def level_commit(value, new_mask, lvl):
+    """BFS/CC apply: a vertex first reached at level ``lvl+1`` keeps it."""
+    return jnp.where(new_mask, lvl + 1, value)
+
+
+def minplus_commit(value, new_mask, lvl):
+    """SSSP (unit weights) apply: min-plus relaxation dist = min(dist,
+    lvl+1) over newly-relaxed planes.  With unit weights first arrival IS
+    the minimum, so this converges in the same level-synchronous sweeps."""
+    return jnp.minimum(value, jnp.where(new_mask, lvl + 1, INF))
+
+
+def frontier_drained(sv: np.ndarray) -> bool:
+    """Shared convergence predicate: no plane produced a new discovery."""
+    return int(sv[SV_NF]) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexProgram:
+    """Per-algorithm bundle plugged into the shared engine.
+
+    Frozen + module-level callables => hashable, so a program is a stable
+    static jit argument (one compiled step per (program, budget, pallas)).
+    ``undirected=True`` means the algorithm's semantics require the
+    symmetrized graph (engine builders symmetrize before ``build_local_
+    graph``; the engine itself is orientation-agnostic).
+    """
+
+    name: str
+    init: Callable = plane_seed_init
+    commit: Callable = level_commit
+    done: Callable = frontier_drained
+    combine: str = "or"          # plane merge op (see kernels.msbfs_propagate)
+    undirected: bool = False
+
+
+BFS = VertexProgram(name="bfs")
+CC = VertexProgram(name="cc", undirected=True)
+SSSP = VertexProgram(name="sssp", commit=minplus_commit)
+
+PROGRAMS = {p.name: p for p in (BFS, CC, SSSP)}
+
+
+def get_program(name: str) -> VertexProgram:
+    try:
+        return PROGRAMS[name]
+    except KeyError:
+        raise ValueError(f"unknown vertex program {name!r}; "
+                         f"have {sorted(PROGRAMS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Shared packed-plane machinery (the extracted MS-BFS hot path).
+#
+# Frontier/seen state is a per-vertex PLANE mask — bit b of row v says
+# "plane b has reached v" — packed into uint32[n_pad, ceil(B/32)] words
+# (bitmap.pack_rows).  Every CSR/CSC edge read is shared by the whole
+# batch: propagating along an edge is one 32/64-bit combine instead of B
+# separate traversals (MS-BFS sharing; Then et al., VLDB'14).
+#
+# The packed words are the ONLY state representation: push gathers the
+# frontier words of budgeted edges and scatter-combines them into the
+# candidate words (Pallas msbfs_propagate / bitmap._scatter_or_rows);
+# pull reduces each vertex's in-list with a segmented OR-scan over the
+# static CSC edge stream (bitmap.segment_or_rows) — no unpack, no bool
+# plane arrays, no scatter buffers.
+# ---------------------------------------------------------------------------
+
+def _vp_statvec(g: LocalGraph, new_w, seen_w, total, overflow, nb: int):
+    """Fused per-level stats: scheduler inputs for the NEXT level, this
+    step's edge total/overflow, and the discovery popcount, stacked into
+    one int32[7] so the driver fetches a single array per level.
+
+    ``nb`` is the TRUE batch size: the pad planes of the last word are
+    unseen by construction, so masking with the padded width would make
+    every vertex count as "unseen by some plane" forever."""
+    pmask = bitmap.plane_mask(nb)
+    any_f = bitmap.any_rows(new_w)
+    un_any = bitmap.any_rows(~seen_w & pmask)
+    return jnp.stack([
+        jnp.sum(any_f, dtype=jnp.int32),
+        jnp.sum(jnp.where(any_f, g.out_deg, 0), dtype=jnp.int32),
+        jnp.sum(jnp.where(un_any, g.in_deg, 0), dtype=jnp.int32),
+        jnp.sum(un_any, dtype=jnp.int32),
+        jnp.asarray(total, jnp.int32),
+        jnp.asarray(overflow, jnp.int32),
+        bitmap.popcount(new_w),
+    ])
+
+
+def _vp_commit(g: LocalGraph, program: VertexProgram, new_w, seen_w, value,
+               lvl, total, overflow):
+    """Per-level apply (the pipeline's single unpack point) + fused stats."""
+    new_mask = bitmap.unpack_rows(new_w, value.shape[1])
+    value2 = program.commit(value, new_mask, lvl)
+    return value2, _vp_statvec(g, new_w, seen_w, total, overflow,
+                               value.shape[1])
+
+
+def _propagate_edges(g: LocalGraph, frontier_w, seen_w, src, tgt, valid,
+                     use_pallas: bool, combine: str = "or"):
+    """Fused P2->P3 on packed words: cand[tgt] ⊕= frontier[src], then
+    new = cand & ~seen, seen |= new.  Pallas kernel or jnp fallback."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        new, seen2, _ = kops.msbfs_propagate(frontier_w, seen_w, src, tgt,
+                                             valid, op=combine)
+        return new, seen2
+    if combine != "or":
+        raise NotImplementedError(
+            f"jnp fallback implements combine='or' only, got {combine!r} "
+            "(payload-plane combines run through the Pallas kernel)")
+    msg = frontier_w[jnp.maximum(src, 0)]
+    cand = bitmap._scatter_or_rows(
+        jnp.zeros_like(frontier_w), jnp.where(valid, tgt, g.n_pad), msg)
+    new = cand & ~seen_w
+    return new, seen_w | new
+
+
+def _propagate_pull_scan(g: LocalGraph, frontier_w):
+    """Candidate plane words for ALL vertices via the CSC edge stream:
+    cand[v] = OR of frontier[parent] over v's in-list.  The edges are
+    already grouped by child, so a segmented OR-scan + one gather at the
+    segment ends replaces the scatter entirely (packed words throughout)."""
+    if g.in_indices.shape[0] == 0:
+        return jnp.zeros_like(frontier_w)
+    msg = frontier_w[g.in_indices]                  # [E, nw] packed gather
+    scan = bitmap.segment_or_rows(msg, g.in_seg_first)
+    return jnp.where((g.in_seg_end >= 0)[:, None],
+                     scan[jnp.maximum(g.in_seg_end, 0)], jnp.uint32(0))
+
+
+@partial(jax.jit, static_argnames=("program",))
+def vp_init_state(g: LocalGraph, roots: jax.Array, program: VertexProgram):
+    frontier, seen, value = program.init(g, roots)
+    return (frontier, seen, value,
+            _vp_statvec(g, frontier, seen, 0, 0, roots.shape[0]))
+
+
+@partial(jax.jit, static_argnames=("program", "budget", "use_pallas"))
+def vp_push_step(g: LocalGraph, frontier_w, seen_w, value, lvl,
+                 program: VertexProgram, budget: int,
+                 use_pallas: bool = False):
+    """Batched push on packed words: expand out-lists of any-plane
+    frontier vertices; each budgeted edge carries its endpoint's packed
+    plane word straight into the candidate planes (fused P2->P3)."""
+    any_f = bitmap.any_rows(frontier_w)
+    active, _ = compact_indices(any_f, g.n_pad)
+    src, nbr, valid, total = expand_edges(active, g.out_indptr,
+                                          g.out_indices, budget)
+    new, seen2 = _propagate_edges(g, frontier_w, seen_w, src, nbr, valid,
+                                  use_pallas, program.combine)
+    value2, statvec = _vp_commit(g, program, new, seen2, value, lvl, total,
+                                 total > budget)
+    return new, seen2, value2, statvec
+
+
+@partial(jax.jit, static_argnames=("program", "budget", "use_pallas"))
+def vp_pull_step(g: LocalGraph, frontier_w, seen_w, value, lvl,
+                 program: VertexProgram, budget: int = 0,
+                 use_pallas: bool = False):
+    """Batched pull on packed words.
+
+    Default path: dense segmented OR-scan over the whole CSC edge stream
+    (never overflows, no budget).  Pallas path: budgeted expansion of
+    some-plane-unseen vertices through the fused propagate kernel."""
+    if use_pallas:
+        un_any = bitmap.any_rows(
+            ~seen_w & bitmap.plane_mask(value.shape[1]))
+        active, _ = compact_indices(un_any, g.n_pad)
+        child, parent, valid, total = expand_edges(
+            active, g.in_indptr, g.in_indices, budget)
+        new, seen2 = _propagate_edges(g, frontier_w, seen_w, parent, child,
+                                      valid, True, program.combine)
+        overflow = total > budget
+    else:
+        cand = _propagate_pull_scan(g, frontier_w)
+        new = cand & ~seen_w
+        seen2 = seen_w | new
+        total = jnp.int32(g.in_indices.shape[0])
+        overflow = jnp.int32(0)
+    value2, statvec = _vp_commit(g, program, new, seen2, value, lvl, total,
+                                 overflow)
+    return new, seen2, value2, statvec
+
+
+def vp_reference(g: LocalGraph, roots, program: VertexProgram = BFS,
+                 max_iters: int | None = None):
+    """Fully-jit dense vertex-program loop (packed words, pull-form
+    edge-parallel steps).  Returns the finalized value rows [B, n]."""
+    roots = jnp.asarray(roots, jnp.int32)
+    max_iters = max_iters or g.n_pad
+    frontier0, seen0, value0 = program.init(g, roots)
+
+    def cond(state):
+        frontier, seen, value, lvl = state
+        return (bitmap.popcount(frontier) > 0) & (lvl < max_iters)
+
+    def body(state):
+        frontier, seen, value, lvl = state
+        cand = _propagate_pull_scan(g, frontier)
+        new = cand & ~seen
+        seen = seen | new
+        new_mask = bitmap.unpack_rows(new, roots.shape[0])
+        value = program.commit(value, new_mask, lvl)
+        return new, seen, value, lvl + 1
+
+    frontier, seen, value, lvl = jax.lax.while_loop(
+        cond, body, (frontier0, seen0, value0, jnp.int32(0)))
+    return value[: g.n].T
+
+
+def msbfs_reference(g: LocalGraph, roots, max_iters: int | None = None):
+    """Fully-jit dense MS-BFS loop (packed words).  Returns level [B, n]."""
+    return vp_reference(g, roots, BFS, max_iters)
+
+
+# ---------------------------------------------------------------------------
+# Results + the generic one-sync-per-level driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class VertexProgramResult:
+    levels: np.ndarray          # int32[B, n] — one value row per plane
+    batch: int
+    iterations: int
+    # edges actually streamed per level.  NOTE: the packed pipeline's
+    # scan-based pull reads the WHOLE CSC edge stream per pull level
+    # (that is its cost model), so this is not comparable edge-for-edge
+    # with the budgeted bool-plane baseline's m_u-bounded pulls.
+    edges_inspected: int
+    push_iters: int
+    pull_iters: int
+    traversed_edges: int        # summed over all planes (paper §VI-A metric)
+    seconds: float
+    host_transfers: int = 0     # blocking device->host fetches during run
+    algo: str = "bfs"
+    labels: np.ndarray | None = None   # CC: int64[n] min-seed labels
+
+    @property
+    def distances(self) -> np.ndarray:
+        """SSSP alias: the value rows are hop distances."""
+        return self.levels
+
+    @property
+    def aggregate_teps(self) -> float:
+        return self.traversed_edges / max(self.seconds, 1e-12)
+
+    @property
+    def gteps(self) -> float:
+        return self.aggregate_teps / 1e9
+
+
+# Backwards-compatible name: BFS results are the same record.
+MSBFSResult = VertexProgramResult
+
+
+class VertexProgramRunner:
+    """Python-driven hybrid vertex-program engine over a batch of roots.
+
+    The per-iteration structure is the paper's pipeline (stats -> mode ->
+    gather/scan step -> P3 commit) with one bit-plane per root; direction
+    choice uses any-plane frontier / any-plane-unseen statistics.  Plane
+    state never unpacks between P1 and the commit, and each level costs
+    exactly one blocking device->host transfer (the fused stats vector):
+    ``result.host_transfers == iterations + 2``.
+
+    ``run`` is the SHARED entry for every algorithm: it validates the
+    roots once (negative / >= |V| roots would scatter silently out of
+    bounds) so no instantiation can forget to.
+    """
+
+    program: VertexProgram = BFS
+
+    def __init__(self, g: LocalGraph, program: VertexProgram | None = None,
+                 sched: SchedulerConfig | None = None,
+                 init_budget: int = 1 << 15, use_pallas: bool = False):
+        self.g = g
+        self.program = program if program is not None else type(self).program
+        self.sched = sched or SchedulerConfig()
+        self.init_budget = init_budget
+        self.use_pallas = use_pallas
+        self._transfers = 0
+        self.last_stats: dict = {}
+        # fetched once here so the TEPS accounting after each run is not
+        # an extra (uncounted) device->host transfer
+        self._out_deg_np = np.asarray(g.out_deg)[: g.n]
+
+    # -- engine protocol --------------------------------------------------
+    @property
+    def num_vertices(self) -> int:
+        return int(self.g.n)
+
+    @property
+    def out_deg(self) -> np.ndarray:
+        """Out-degrees [n] (the engine protocol's TEPS numerator input)."""
+        return self._out_deg_np
+
+    def _fetch(self, arr) -> np.ndarray:
+        self._transfers += 1
+        return np.asarray(arr)
+
+    def run(self, roots) -> VertexProgramResult:
+        # validate BEFORE the int32 cast: a >= 2**31 root must error, not
+        # wrap.  This is the shared entry — every algorithm goes through it.
+        roots = validate_roots(np.asarray(roots), self.g.n).astype(np.int32)
+        self._transfers = 0
+        return self._finalize(self._run_packed(roots), roots)
+
+    def run_batch(self, roots) -> np.ndarray:
+        """Engine-protocol entry: value rows [B, n] + ``last_stats``."""
+        return self.run(roots).levels
+
+    def _finalize(self, res: VertexProgramResult,
+                  roots: np.ndarray) -> VertexProgramResult:
+        """Per-algorithm post-processing hook (e.g. CC labels)."""
+        return res
+
+    # -- the extracted one-sync-per-level loop ----------------------------
+    def _run_packed(self, roots: np.ndarray) -> VertexProgramResult:
+        g, program = self.g, self.program
+        b = int(roots.size)
+        t0 = time.perf_counter()
+        frontier, seen, value, statvec = vp_init_state(
+            g, jnp.asarray(roots), program)
+        sv = self._fetch(statvec)
+        mode = PUSH
+        lvl = 0
+        inspected = 0
+        push_iters = pull_iters = 0
+        # no point budgeting past the whole edge array (keeps the budgeted
+        # kernels small on tiny graphs); the overflow loop still deepens
+        budget = min(self.init_budget,
+                     max(g.out_indices.shape[0], g.in_indices.shape[0]) + 1)
+        while not program.done(sv):
+            mode = choose_mode_host(self.sched, mode, int(sv[SV_NF]),
+                                    int(sv[SV_MF]), int(sv[SV_MU]), g.n,
+                                    int(sv[SV_NU]))
+            # the scan-based pull is dense over the CSC edge stream: only
+            # push (and the budgeted Pallas pull) need an edge budget
+            budgeted = mode == PUSH or self.use_pallas
+            if budgeted:
+                need = int(sv[SV_MF]) if mode == PUSH else int(sv[SV_MU])
+                cap = (g.out_indices if mode == PUSH
+                       else g.in_indices).shape[0]
+                while budget < min(need, cap + 1):
+                    budget *= 2
+            step = vp_push_step if mode == PUSH else vp_pull_step
+            # retry from the PRE-step seen: an overflowed (truncated) step
+            # may have committed a partial discovery set
+            state0 = (frontier, seen, value)
+            frontier, seen, value, statvec = step(
+                g, *state0, np.int32(lvl), program,
+                budget if budgeted else 0, self.use_pallas)
+            sv = self._fetch(statvec)
+            while budgeted and bool(sv[SV_OVERFLOW]):
+                budget *= 2            # HBM-reader queue overflow: deepen
+                frontier, seen, value, statvec = step(
+                    g, *state0, np.int32(lvl), program, budget,
+                    self.use_pallas)
+                sv = self._fetch(statvec)
+            lvl += 1
+            inspected += int(sv[SV_TOTAL])
+            if mode == PUSH:
+                push_iters += 1
+            else:
+                pull_iters += 1
+        value.block_until_ready()
+        dt = time.perf_counter() - t0
+        rows = self._fetch(value[: g.n]).T           # [B, n]
+        return self._result(rows, b, lvl, inspected, push_iters,
+                            pull_iters, dt)
+
+    def _result(self, rows, b, lvl, inspected, push_iters, pull_iters,
+                dt) -> VertexProgramResult:
+        traversed = count_traversed_edges(self._out_deg_np, rows)
+        res = VertexProgramResult(
+            levels=rows, batch=b, iterations=lvl, edges_inspected=inspected,
+            push_iters=push_iters, pull_iters=pull_iters,
+            traversed_edges=traversed, seconds=dt,
+            host_transfers=self._transfers, algo=self.program.name)
+        self.last_stats = dict(
+            iterations=res.iterations, edges_inspected=res.edges_inspected,
+            push_iters=res.push_iters, pull_iters=res.pull_iters,
+            batch=res.batch, traversed_edges=res.traversed_edges,
+            seconds=res.seconds, host_transfers=res.host_transfers,
+            algo=res.algo)
+        return res
+
+
+# ---------------------------------------------------------------------------
+# Instantiation 1: batched multi-source BFS (+ the legacy bool-plane
+# baseline, kept as `MultiSourceBFSRunner(packed=False)` for differential
+# tests and the throughput benchmark's "packed: off" arm).
+# ---------------------------------------------------------------------------
+
+def _p3_update_ms(cand_w, seen_w, use_pallas: bool):
+    """Batched P3: fused per-plane Pallas kernel or plain jnp."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        new_t, seen_t, _ = kops.fused_frontier_update_batch(
+            cand_w.T, seen_w.T)       # planes-major for the kernel grid
+        return new_t.T, seen_t.T
+    new = cand_w & ~seen_w
+    return new, seen_w | new
+
+
+@partial(jax.jit, static_argnames=("budget", "use_pallas"))
+def _boolplane_push_step(g: LocalGraph, frontier_w, seen_w, budget: int,
+                         use_pallas: bool = False):
+    """Bool-plane push: unpacks the whole frontier, builds a [budget, B]
+    bool message array and a [n_pad+1, nb] bool scatter buffer per level."""
+    nb = frontier_w.shape[1] * bitmap.WORD_BITS
+    fmask = bitmap.unpack_rows(frontier_w)            # [n_pad, B']
+    any_f = bitmap.any_rows(frontier_w)
+    active, _ = compact_indices(any_f, g.n_pad)
+    src, nbr, valid, total = expand_edges(active, g.out_indptr,
+                                          g.out_indices, budget)
+    msg = fmask[jnp.maximum(src, 0)] & valid[:, None]  # [budget, B']
+    tgt = jnp.where(valid, nbr, g.n_pad)
+    cand = jnp.zeros((g.n_pad + 1, nb), jnp.bool_)
+    cand = cand.at[tgt].max(msg, mode="drop")[:-1]
+    cand_w = bitmap.pack_rows(cand)
+    new, seen2 = _p3_update_ms(cand_w, seen_w, use_pallas)
+    return new, seen2, total, total > budget
+
+
+@partial(jax.jit, static_argnames=("budget", "use_pallas"))
+def _boolplane_pull_step(g: LocalGraph, frontier_w, seen_w, budget: int,
+                         use_pallas: bool = False):
+    """Bool-plane pull: vertices unseen by SOME source read their in-lists
+    once and OR their parents' frontier masks (via bool plane arrays)."""
+    nb = frontier_w.shape[1] * bitmap.WORD_BITS
+    pmask = bitmap.plane_mask(nb)
+    fmask = bitmap.unpack_rows(frontier_w)
+    un_any = bitmap.any_rows(~seen_w & pmask)
+    active, _ = compact_indices(un_any, g.n_pad)
+    child, parent, valid, total = expand_edges(active, g.in_indptr,
+                                               g.in_indices, budget)
+    msg = fmask[jnp.maximum(parent, 0)] & valid[:, None]
+    tgt = jnp.where(valid, child, g.n_pad)
+    cand = jnp.zeros((g.n_pad + 1, nb), jnp.bool_)
+    cand = cand.at[tgt].max(msg, mode="drop")[:-1]
+    cand_w = bitmap.pack_rows(cand)
+    new, seen2 = _p3_update_ms(cand_w, seen_w, use_pallas)
+    return new, seen2, total, total > budget
+
+
+@jax.jit
+def _ms_iter_stats(g: LocalGraph, frontier_w, seen_w):
+    nb = frontier_w.shape[1] * bitmap.WORD_BITS
+    pmask = bitmap.plane_mask(nb)
+    any_f = bitmap.any_rows(frontier_w)
+    un_any = bitmap.any_rows(~seen_w & pmask)
+    n_f = jnp.sum(any_f, dtype=jnp.int32)
+    m_f = jnp.sum(jnp.where(any_f, g.out_deg, 0), dtype=jnp.int32)
+    m_u = jnp.sum(jnp.where(un_any, g.in_deg, 0), dtype=jnp.int32)
+    n_u = jnp.sum(un_any, dtype=jnp.int32)
+    return n_f, m_f, m_u, n_u
+
+
+class MultiSourceBFSRunner(VertexProgramRunner):
+    """Batched hybrid MS-BFS: the BFS instantiation of the engine.
+
+    ``packed=True`` (default) runs the shared packed-word pipeline.
+    ``packed=False`` preserves the pre-packed bool-plane implementation as
+    a differential/benchmark baseline (bool planes + per-scalar syncs).
+    """
+
+    program = BFS
+
+    def __init__(self, g: LocalGraph, sched: SchedulerConfig | None = None,
+                 init_budget: int = 1 << 15, use_pallas: bool = False,
+                 packed: bool = True):
+        super().__init__(g, BFS, sched, init_budget, use_pallas)
+        self.packed = packed
+
+    def run(self, roots) -> VertexProgramResult:
+        if self.packed:
+            return super().run(roots)
+        roots = validate_roots(np.asarray(roots), self.g.n).astype(np.int32)
+        self._transfers = 0
+        return self._run_boolplane(roots)
+
+    def _run_boolplane(self, roots: np.ndarray) -> VertexProgramResult:
+        """Pre-packed-pipeline driver (bool planes + per-scalar syncs)."""
+        g = self.g
+        b = int(roots.size)
+        frontier, seen, level = plane_seed_init(g, jnp.asarray(roots))
+        mode = jnp.int32(PUSH)
+        lvl = 0
+        inspected = 0
+        push_iters = pull_iters = 0
+        budget = self.init_budget
+        t0 = time.perf_counter()
+        while True:
+            n_f, m_f, m_u, n_u = _ms_iter_stats(g, frontier, seen)
+            n_f, m_f, m_u, n_u = (self._fetch(n_f), self._fetch(m_f),
+                                  self._fetch(m_u), self._fetch(n_u))
+            if int(n_f) == 0:
+                break
+            mode = choose_mode(self.sched, mode, n_f, m_f, m_u, g.n, n_u)
+            is_push = int(self._fetch(mode)) == PUSH  # another per-level sync
+            step = (_boolplane_push_step if is_push
+                    else _boolplane_pull_step)
+            need = int(m_f) if is_push else int(m_u)
+            while budget < min(need, g.out_indices.shape[0] + 1):
+                budget *= 2
+            seen0 = seen
+            new, seen, total, overflow = step(g, frontier, seen0, budget,
+                                              self.use_pallas)
+            while bool(self._fetch(overflow)):
+                budget *= 2
+                new, seen, total, overflow = step(g, frontier, seen0,
+                                                  budget, self.use_pallas)
+            new_mask = bitmap.unpack_rows(new, b)
+            level = jnp.where(new_mask, lvl + 1, level)
+            frontier = new
+            lvl += 1
+            inspected += int(self._fetch(total))
+            if is_push:
+                push_iters += 1
+            else:
+                pull_iters += 1
+        level.block_until_ready()
+        dt = time.perf_counter() - t0
+        levels = self._fetch(level[: g.n]).T       # [B, n]
+        return self._result(levels, b, lvl, inspected, push_iters,
+                            pull_iters, dt)
+
+
+# ---------------------------------------------------------------------------
+# Instantiation 2: batched multi-seed connected components.
+# ---------------------------------------------------------------------------
+
+def component_labels(levels: np.ndarray, seeds: np.ndarray) -> np.ndarray:
+    """Per-vertex CC labels from the multi-seed reach levels.
+
+    ``label[v]`` = the smallest seed VERTEX ID whose component contains
+    ``v`` (all seeds in one component reach the same vertex set at
+    convergence, so labels are uniform per component), or -1 when no seed
+    reaches ``v``."""
+    levels = np.asarray(levels)
+    seeds = np.asarray(seeds, np.int64)
+    reach = levels < int(INF)                        # [B, n]
+    big = np.iinfo(np.int64).max
+    lab = np.where(reach, seeds[:, None], big).min(axis=0)
+    return np.where(lab == big, -1, lab)
+
+
+class ConnectedComponentsRunner(VertexProgramRunner):
+    """Batched multi-seed CC: one plane per seed, flood fill to fixpoint.
+
+    The engine must be built over the SYMMETRIZED graph (components are an
+    undirected notion) — use :meth:`from_csr`, or pass a ``LocalGraph``
+    built from ``repro.graph.symmetrize_csr`` output.  ``run(seeds)``
+    returns hop levels from each seed ([B, n]; membership = ``level <
+    INF``) plus ``result.labels`` — the classic per-vertex component
+    labeling (min seed id, -1 for vertices no seed reaches).
+    """
+
+    program = CC
+
+    @classmethod
+    def from_csr(cls, csr, **kw) -> "ConnectedComponentsRunner":
+        """Build from a (possibly directed) CSR: symmetrize, then wire up."""
+        from repro.core.bfs_local import build_local_graph
+        from repro.graph.csr import symmetrize_csr, transpose_csr
+        sym = symmetrize_csr(csr)
+        return cls(build_local_graph(sym, transpose_csr(sym)), **kw)
+
+    def _finalize(self, res: VertexProgramResult,
+                  roots: np.ndarray) -> VertexProgramResult:
+        res.labels = component_labels(res.levels, roots)
+        self.last_stats["components"] = int(
+            np.unique(res.labels[res.labels >= 0]).size)
+        return res
+
+
+# ---------------------------------------------------------------------------
+# Instantiation 3: batched SSSP (unit-weight hop distances).
+# ---------------------------------------------------------------------------
+
+class SSSPRunner(VertexProgramRunner):
+    """Batched single-source shortest paths, unit edge weights.
+
+    One frontier plane per source; the apply is a min-plus relaxation
+    (``dist = min(dist, lvl + 1)`` over newly-relaxed planes) rather than
+    BFS's first-touch level write — with unit weights both converge to
+    hop distances, which is what the differential tests pin against a
+    dense Bellman–Ford oracle.  ``result.distances`` ([B, n], INF =
+    unreachable) aliases the value rows.
+    """
+
+    program = SSSP

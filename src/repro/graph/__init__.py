@@ -1,8 +1,10 @@
-from repro.graph.csr import CSRGraph, csr_from_edges, transpose_csr, symmetrize_edges
+from repro.graph.csr import (CSRGraph, csr_from_edges, symmetrize_csr,
+                             symmetrize_edges, transpose_csr)
 from repro.graph.generators import rmat_edges, uniform_edges
 from repro.graph.datasets import get_dataset, DATASETS
 
 __all__ = [
     "CSRGraph", "csr_from_edges", "transpose_csr", "symmetrize_edges",
-    "rmat_edges", "uniform_edges", "get_dataset", "DATASETS",
+    "symmetrize_csr", "rmat_edges", "uniform_edges", "get_dataset",
+    "DATASETS",
 ]

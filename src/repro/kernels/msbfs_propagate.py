@@ -40,9 +40,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Cross-plane merge ops for the scatter accumulation (the vertex-program
+# ``combine``).  "or" is the bit-plane merge every shipped program uses;
+# "max" is the payload-plane hook (e.g. per-plane uint32 priorities) —
+# identical to "or" on single-bit planes, different on multi-bit words.
+# Both accumulate from the same zero identity, and P3 keeps bitmask
+# semantics (new = cand & ~seen) either way.
+_COMBINE = {
+    "or": lambda a, b: a | b,
+    "max": jnp.maximum,
+}
+
 
 def _kernel(src_ref, tgt_ref, frontier_ref, seen_ref, new_ref, vout_ref,
-            cnt_ref, *, block_edges: int):
+            cnt_ref, *, block_edges: int, op: str):
+    combine = _COMBINE[op]
     step = pl.program_id(0)
 
     @pl.when(step == 0)
@@ -57,7 +69,7 @@ def _kernel(src_ref, tgt_ref, frontier_ref, seen_ref, new_ref, vout_ref,
         t = tgt_ref[e]
         msg = pl.load(frontier_ref, (pl.ds(s, 1), slice(None)))
         cur = pl.load(new_ref, (pl.ds(t, 1), slice(None)))
-        pl.store(new_ref, (pl.ds(t, 1), slice(None)), cur | msg)
+        pl.store(new_ref, (pl.ds(t, 1), slice(None)), combine(cur, msg))
         return carry
 
     jax.lax.fori_loop(0, block_edges, body, 0)
@@ -73,21 +85,26 @@ def _kernel(src_ref, tgt_ref, frontier_ref, seen_ref, new_ref, vout_ref,
                                 .astype(jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("block_edges", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_edges", "interpret", "op"))
 def msbfs_propagate_planes(frontier: jax.Array, seen: jax.Array,
                            src: jax.Array, tgt: jax.Array,
-                           block_edges: int = 1024, interpret: bool = True):
-    """Fused gather/scatter-OR/P3 over packed plane words.
+                           block_edges: int = 1024, interpret: bool = True,
+                           op: str = "or"):
+    """Fused gather/scatter-combine/P3 over packed plane words.
 
     frontier/seen: uint32[n_rows, nw] — the caller appends a trash row
         (frontier trash = 0, seen trash = all-ones) so invalid edges can
         point at row ``n_rows - 1`` and contribute nothing to the count.
     src/tgt: int32[m] in [0, n_rows), m a multiple of ``block_edges``.
+    op: cross-plane merge for the scatter accumulation ("or" | "max").
 
     Returns (new, seen_out, count[1, 1]) where
-    new = scatter_or(frontier[src] -> tgt) & ~seen, seen_out = seen | new,
-    count = popcount(new).
+    new = scatter_combine(frontier[src] -> tgt) & ~seen,
+    seen_out = seen | new, count = popcount(new).
     """
+    if op not in _COMBINE:
+        raise ValueError(f"op must be one of {sorted(_COMBINE)}, got {op!r}")
     n_rows, nw = frontier.shape
     m = src.shape[0]
     assert m % block_edges == 0, (m, block_edges)
@@ -105,7 +122,7 @@ def msbfs_propagate_planes(frontier: jax.Array, seen: jax.Array,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, block_edges=block_edges),
+        functools.partial(_kernel, block_edges=block_edges, op=op),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((n_rows, nw), jnp.uint32),

@@ -21,9 +21,11 @@ INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
 def msbfs_propagate(frontier_w: jax.Array, seen_w: jax.Array,
                     src: jax.Array, tgt: jax.Array, valid: jax.Array,
-                    block_edges: int = 1024, interpret: bool | None = None):
-    """Fused P2->P3 MS-BFS propagate: gather ``frontier_w[src]`` words and
-    scatter-OR them into the candidate planes at ``tgt``, then commit
+                    block_edges: int = 1024, interpret: bool | None = None,
+                    op: str = "or"):
+    """Fused P2->P3 vertex-program propagate: gather ``frontier_w[src]``
+    words and scatter-combine them into the candidate planes at ``tgt``
+    (``op``: "or" for bit-planes, "max" for payload planes), then commit
     ``new = cand & ~seen`` / ``seen |= new`` in the same kernel pass.
 
     frontier_w/seen_w: uint32[n_pad, nw] packed plane words.
@@ -52,7 +54,7 @@ def msbfs_propagate(frontier_w: jax.Array, seen_w: jax.Array,
         tidx = jnp.pad(tidx, (0, pad), constant_values=n)
     new, vout, cnt = msbfs_propagate_planes(f1, s1, sidx, tidx,
                                             block_edges=blk,
-                                            interpret=interpret)
+                                            interpret=interpret, op=op)
     return new[:-1], vout[:-1], cnt[0, 0]
 
 

@@ -23,15 +23,25 @@ def bitmap_update_batch_ref(cand: jax.Array, visited: jax.Array):
 
 
 def msbfs_propagate_planes_ref(frontier: jax.Array, seen: jax.Array,
-                               src: jax.Array, tgt: jax.Array):
+                               src: jax.Array, tgt: jax.Array,
+                               op: str = "or"):
     """Oracle for kernels.msbfs_propagate.msbfs_propagate_planes.
 
     Same padded-input contract as the kernel (trash row appended by the
-    ops wrapper); the scatter-OR is the per-bit-plane jnp fallback
-    ``bitmap._scatter_or_rows`` — the two must agree bit for bit.
+    ops wrapper); the "or" scatter is the per-bit-plane jnp fallback
+    ``bitmap._scatter_or_rows``, the "max" scatter is a segment-max over
+    the same zero identity — the kernel must agree bit for bit with both.
+    P3 keeps bitmask semantics (new = cand & ~seen) for every op.
     """
-    from repro.core.bitmap import _scatter_or_rows
-    cand = _scatter_or_rows(jnp.zeros_like(frontier), tgt, frontier[src])
+    if op == "or":
+        from repro.core.bitmap import _scatter_or_rows
+        cand = _scatter_or_rows(jnp.zeros_like(frontier), tgt,
+                                frontier[src])
+    elif op == "max":
+        cand = jnp.zeros_like(frontier).at[tgt].max(frontier[src],
+                                                    mode="drop")
+    else:
+        raise ValueError(f"op must be 'or' or 'max', got {op!r}")
     nf = cand & ~seen
     cnt = jnp.sum(jax.lax.population_count(nf).astype(jnp.int32)
                   ).reshape(1, 1)

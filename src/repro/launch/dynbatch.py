@@ -136,11 +136,12 @@ class DynamicBatcher:
         self.max_batch = int(max_batch)
         self.max_pending = int(max_pending)
         self.pad_to_plane = bool(pad_to_plane)
-        # BFSEngine protocol: every engine exposes num_vertices + run_batch
-        # (engine_num_vertices keeps a .g/.pg fallback for older wrappers)
+        # BFSEngine protocol: every engine exposes num_vertices, out_deg
+        # and run_batch (engine_num_vertices keeps a .g/.pg fallback for
+        # older wrappers; engines without out_deg just lose TEPS stats)
         self.num_vertices = engine_num_vertices(engine)
-        if out_deg is None and getattr(engine, "g", None) is not None:
-            out_deg = np.asarray(engine.g.out_deg)[:engine.g.n]
+        if out_deg is None:
+            out_deg = getattr(engine, "out_deg", None)
         self.out_deg = None if out_deg is None else np.asarray(out_deg)
         self.clock = time.monotonic if clock is None else clock
         # waves history is bounded: a long-running server must not grow

@@ -21,6 +21,12 @@ TEPS.
 
   PYTHONPATH=src python -m repro.launch.serve --bfs-graph rmat16-16 \
       --bfs-serve-async --bfs-requests 64 --bfs-window 0.05 --bfs-rate 200
+
+Other vertex programs serve through the same batcher — ``--algo cc`` /
+``--algo sssp`` run batched connected components / unit-weight SSSP waves
+over the same plane-packed engine:
+
+  PYTHONPATH=src python -m repro.launch.serve --algo cc --bfs-requests 32
 """
 from __future__ import annotations
 
@@ -90,51 +96,71 @@ def greedy_decode(arch: str, reduced: bool, batch: int, prompt_len: int,
     }
 
 
-def build_bfs_engine(graph: str, *, distributed: bool | None = None,
-                     pes_per_device: int = 2):
-    """Build a query engine with the graph resident on the host devices.
+def build_engine(graph: str, *, algo: str = "bfs",
+                 distributed: bool | None = None, pes_per_device: int = 2):
+    """Build a vertex-program query engine with the graph device-resident.
 
-    Returns (engine, out_degrees).  Single device -> the local
-    ``MultiSourceBFSRunner``; multi-device -> ``DistributedBFS`` (2 PEs
-    per PC by default, the paper's Table II shape).  The engine is meant
-    to be built once and reused across ``bfs_batch`` calls — the graph
-    arrays stay device-resident between queries.
+    ``algo``: "bfs" | "cc" | "sssp" (the shipped vertex programs — CC
+    symmetrizes the graph first, components being an undirected notion).
+    Returns (engine, out_degrees) where the degrees are those of the graph
+    actually traversed (symmetrized for CC).  Single device -> the local
+    runner for the program; multi-device -> ``DistributedBFS`` carrying
+    the program (2 PEs per PC by default, the paper's Table II shape).
+    The engine is meant to be built once and reused across ``bfs_batch``
+    calls — the graph arrays stay device-resident between queries.
     """
-    from repro.core import MultiSourceBFSRunner, build_local_graph, \
-        partition_graph
-    from repro.graph import get_dataset
+    from repro.core import (ConnectedComponentsRunner, MultiSourceBFSRunner,
+                            SSSPRunner, build_local_graph, get_program,
+                            partition_graph)
+    from repro.graph import get_dataset, symmetrize_csr
 
+    program = get_program(algo)
     ds = get_dataset(graph)
-    deg = np.diff(ds.csr.indptr)
+    csr, csc = ds.csr, ds.csc
+    if program.undirected:
+        csr = symmetrize_csr(csr)
+        csc = csr            # a symmetrized graph is its own transpose
+    deg = np.diff(csr.indptr)
     n_dev = jax.device_count()
     if distributed is None:
         distributed = n_dev > 1
     if distributed:
         from repro.compat import make_mesh
         from repro.core.bfs_distributed import DistributedBFS
-        pg = partition_graph(ds.csr, ds.csc, n_dev * pes_per_device)
+        pg = partition_graph(csr, csc, n_dev * pes_per_device)
         mesh = make_mesh((n_dev,), ("data",))
-        return DistributedBFS(pg, mesh), deg
-    return MultiSourceBFSRunner(build_local_graph(ds.csr, ds.csc)), deg
+        return DistributedBFS(pg, mesh, program=program), deg
+    runner_cls = {"bfs": MultiSourceBFSRunner,
+                  "cc": ConnectedComponentsRunner,
+                  "sssp": SSSPRunner}[algo]
+    return runner_cls(build_local_graph(csr, csc)), deg
+
+
+def build_bfs_engine(graph: str, *, distributed: bool | None = None,
+                     pes_per_device: int = 2):
+    """BFS-only compat wrapper around :func:`build_engine`."""
+    return build_engine(graph, algo="bfs", distributed=distributed,
+                        pes_per_device=pes_per_device)
 
 
 def bfs_batch(roots, *, graph: str = "rmat16-16", engine=None,
-              out_deg=None) -> dict:
-    """Serve a batch of BFS queries in one multi-source traversal.
+              out_deg=None, algo: str = "bfs") -> dict:
+    """Serve a batch of vertex-program queries in one batched traversal.
 
     ``roots``: sequence of original vertex IDs, one query each.  Duplicate
     roots are allowed (each occupies its own plane slot and resolves
     independently); negative or >= |V| roots raise ``ValueError`` — they
-    would otherwise scatter silently out of bounds (both engines enforce
-    this via ``repro.core.validate_roots``).  Pass a prebuilt ``engine``
-    (from :func:`build_bfs_engine`) to amortize graph residency across
-    calls; otherwise one is built for ``graph``.
-    Returns levels [B, |V|] plus aggregate serving stats.
+    would otherwise scatter silently out of bounds (every engine enforces
+    this via ``repro.core.validate_roots`` in its shared entry).  Pass a
+    prebuilt ``engine`` (from :func:`build_engine`) to amortize graph
+    residency across calls; otherwise one is built for ``graph``/``algo``.
+    Returns value rows [B, |V|] (levels / hop distances) plus aggregate
+    serving stats.
     """
     from repro.core import count_traversed_edges
 
     if engine is None:
-        engine, out_deg = build_bfs_engine(graph)
+        engine, out_deg = build_engine(graph, algo=algo)
     # no dtype cast here: the engine validates first (a float root must
     # raise, not truncate)
     roots = np.asarray(roots)
@@ -156,41 +182,44 @@ def bfs_batch(roots, *, graph: str = "rmat16-16", engine=None,
     return out
 
 
-def serve_bfs(graph: str, batch: int, seed: int = 0) -> dict:
-    engine, deg = build_bfs_engine(graph)
+def serve_bfs(graph: str, batch: int, seed: int = 0,
+              algo: str = "bfs") -> dict:
+    engine, deg = build_engine(graph, algo=algo)
     rng = np.random.default_rng(seed)
     roots = rng.choice(np.flatnonzero(deg > 0), batch, replace=False)
     bfs_batch(roots, engine=engine, out_deg=deg)        # warm-up / compile
     out = bfs_batch(roots, engine=engine, out_deg=deg)
     levels = out.pop("levels")
-    out.update(graph=graph,
+    out.update(graph=graph, algo=algo,
                reached_mean=float((levels < (1 << 30)).sum(1).mean()))
     return out
 
 
 def serve_bfs_async(graph: str, requests: int = 64, window: float = 0.05,
                     max_batch: int = 32, rate: float | None = None,
-                    seed: int = 0) -> dict:
+                    seed: int = 0, algo: str = "bfs") -> dict:
     """Serve a stream of single-root queries through the dynamic batcher.
 
     ``rate`` (req/s) spaces submissions with exponential inter-arrival
     sleeps (open-loop Poisson); ``rate=None`` submits as fast as possible.
-    Returns the batcher's aggregate stats (waves, mean batch, latency
-    p50/p99, aggregate TEPS over busy time) as a JSON-friendly dict.
+    ``algo`` picks the vertex program — the batcher itself is
+    engine-agnostic (the ``BFSEngine`` protocol), so CC and SSSP waves
+    coalesce exactly like BFS waves.  Returns the batcher's aggregate
+    stats (waves, mean batch, latency p50/p99, aggregate TEPS over busy
+    time) as a JSON-friendly dict.
     """
     from repro.launch.dynbatch import (DynamicBatcher, drive_open_loop,
                                        plane_wave_sizes)
 
-    engine, deg = build_bfs_engine(graph)
+    engine, deg = build_engine(graph, algo=algo)
     rng = np.random.default_rng(seed)
     roots = rng.choice(np.flatnonzero(deg > 0), requests, replace=True)
     for m in plane_wave_sizes(max_batch):      # warm-up / compile
         bfs_batch(np.resize(roots, m), engine=engine, out_deg=deg)
-    batcher = DynamicBatcher(engine, out_deg=deg, window=window,
-                             max_batch=max_batch)
+    batcher = DynamicBatcher(engine, window=window, max_batch=max_batch)
     drive_open_loop(batcher, roots, rate=rate, rng=rng)
     out = batcher.stats()
-    out.update(graph=graph, requests=requests, window=window,
+    out.update(graph=graph, algo=algo, requests=requests, window=window,
                max_batch=max_batch, rate=rate)
     return out
 
@@ -203,7 +232,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-tokens", type=int, default=16)
     ap.add_argument("--bfs-graph",
-                    help="serve batched BFS over this graph instead of LM")
+                    help="serve batched graph queries over this graph "
+                         "instead of LM")
+    ap.add_argument("--algo", choices=("bfs", "cc", "sssp"),
+                    help="vertex program to serve (implies graph serving "
+                         "through the dynamic batcher; default graph "
+                         "small-12-8 when --bfs-graph is omitted)")
     ap.add_argument("--bfs-batch", type=int, default=32,
                     help="number of concurrent BFS queries")
     ap.add_argument("--bfs-serve-async", action="store_true",
@@ -220,11 +254,16 @@ def main():
                     help="open-loop Poisson arrival rate in req/s "
                          "(default: submit as fast as possible)")
     args = ap.parse_args()
-    if args.bfs_graph and args.bfs_serve_async:
+    algo = args.algo or "bfs"
+    if args.algo and not args.bfs_graph:
+        args.bfs_graph = "small-12-8"
+    # --algo routes through the dynamic batcher (engine-agnostic serving);
+    # plain --bfs-graph keeps the one-pre-batched-call path
+    if args.bfs_graph and (args.bfs_serve_async or args.algo):
         out = serve_bfs_async(args.bfs_graph, requests=args.bfs_requests,
                               window=args.bfs_window,
                               max_batch=args.bfs_max_batch,
-                              rate=args.bfs_rate)
+                              rate=args.bfs_rate, algo=algo)
     elif args.bfs_graph:
         out = serve_bfs(args.bfs_graph, args.bfs_batch)
     elif args.arch:

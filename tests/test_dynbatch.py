@@ -65,6 +65,30 @@ def test_pad_plane_slots_rejects_empty():
         bitmap.pad_plane_slots(np.asarray([], np.int64))
 
 
+@pytest.mark.parametrize("b,slots", [(1, 32), (32, 32), (33, 64)])
+def test_padded_slots_never_leak_into_results(graph, engine, b, slots):
+    """End-to-end pad/slice round trip through a real wave: B=1, B an
+    exact word multiple (no pad at all), and B=33 padded across a word
+    boundary.  Every future must equal its per-root oracle and the pad
+    slots (duplicates of the first root) must never surface."""
+    csr, _ = graph
+    batcher = DynamicBatcher(engine, window=1.0, max_batch=64,
+                             clock=FakeClock())
+    roots = [int(r) for r in
+             np.random.default_rng(b).choice(256, b, replace=False)]
+    futures = [batcher.submit(r, block=False) for r in roots]
+    waves = batcher.flush()
+    assert len(waves) == 1
+    wave = waves[0]
+    assert wave.batch == b and wave.n_slots == slots
+    for f, r in zip(futures, roots):
+        lv = np.asarray(f.result(timeout=0), np.int64)
+        assert lv.shape == (256,)           # one row per vertex, no slots
+        np.testing.assert_array_equal(lv, bfs_oracle(csr, r))
+    assert batcher.stats()["requests"] == b
+    batcher.close()
+
+
 # ---------------------------------------------------------------------------
 # deterministic fake-clock scheduling
 # ---------------------------------------------------------------------------

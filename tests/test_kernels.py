@@ -91,6 +91,35 @@ def test_msbfs_propagate_parity(n_rows, nw, m, block):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
+@pytest.mark.parametrize("op", ["or", "max"])
+def test_msbfs_propagate_combine_op_parity(op):
+    """Generalized combine: the kernel's op must match the oracle's, on a
+    case where the two combines genuinely disagree (duplicate targets
+    with word values whose OR is not their max)."""
+    from repro.kernels.msbfs_propagate import msbfs_propagate_planes
+    frontier, seen, src, tgt = _propagate_case(65, 2, 192, seed=21)
+    # force colliding targets so OR-accumulation != max-selection
+    tgt = tgt.at[: 64].set(tgt[0])
+    got = msbfs_propagate_planes(frontier, seen, src, tgt,
+                                 block_edges=32, interpret=True, op=op)
+    want = ref.msbfs_propagate_planes_ref(frontier, seen, src, tgt, op=op)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    other = ref.msbfs_propagate_planes_ref(
+        frontier, seen, src, tgt, op="max" if op == "or" else "or")
+    assert not np.array_equal(np.asarray(want[0]), np.asarray(other[0]))
+
+
+def test_msbfs_propagate_rejects_unknown_op():
+    from repro.kernels.msbfs_propagate import msbfs_propagate_planes
+    frontier, seen, src, tgt = _propagate_case(17, 1, 8, seed=1)
+    with pytest.raises(ValueError, match="op"):
+        msbfs_propagate_planes(frontier, seen, src, tgt, interpret=True,
+                               op="xor")
+    with pytest.raises(ValueError, match="op"):
+        ref.msbfs_propagate_planes_ref(frontier, seen, src, tgt, op="xor")
+
+
 def test_msbfs_propagate_parity_noninterpret():
     """Non-interpret arm of the parity harness (TPU-only compile)."""
     if jax.default_backend() != "tpu":
