@@ -7,6 +7,7 @@ from repro.core.partition import PartitionedGraph, partition_graph
 from repro.core.scheduler import (PULL, PUSH, SchedulerConfig, choose_mode,
                                   choose_mode_host)
 from repro.core.vertex_program import (BFS, CC, PROGRAMS, SSSP,
+                                       BudgetOverflowError,
                                        ConnectedComponentsRunner,
                                        MSBFSResult, MultiSourceBFSRunner,
                                        SSSPRunner, VertexProgram,
@@ -21,7 +22,8 @@ __all__ = [
     "build_local_graph", "count_traversed_edges", "engine_num_vertices",
     "msbfs_reference", "validate_roots", "PartitionedGraph",
     "partition_graph", "PULL", "PUSH", "SchedulerConfig", "choose_mode",
-    "choose_mode_host", "BFS", "CC", "SSSP", "PROGRAMS", "VertexProgram",
+    "choose_mode_host", "BFS", "CC", "SSSP", "PROGRAMS",
+    "BudgetOverflowError", "VertexProgram",
     "VertexProgramResult", "VertexProgramRunner",
     "ConnectedComponentsRunner", "SSSPRunner", "component_labels",
     "get_program", "vp_reference",

@@ -110,6 +110,27 @@ BFS = VertexProgram(name="bfs")
 CC = VertexProgram(name="cc", undirected=True)
 SSSP = VertexProgram(name="sssp", commit=minplus_commit)
 
+
+class BudgetOverflowError(RuntimeError):
+    """Push edge budget still overflowed after ``max_overflow_retries``.
+
+    By default the driver absorbs an overflowed (truncated) step silently
+    by doubling the budget and re-running the level.  A serving deployment
+    may prefer a bounded per-wave cost: with ``max_overflow_retries`` set,
+    persistent overflow surfaces as this error carrying the last budget
+    tried, so a fault-tolerance layer (``repro.ft.EngineSupervisor``) can
+    retry the wave with an escalated starting budget instead of deepening
+    inside the measured service time.
+    """
+
+    def __init__(self, budget: int, need: int, retries: int):
+        super().__init__(
+            f"push budget overflowed {retries}x (budget={budget}, "
+            f"level needs ~{need} edges)")
+        self.budget = int(budget)
+        self.need = int(need)
+        self.retries = int(retries)
+
 PROGRAMS = {p.name: p for p in (BFS, CC, SSSP)}
 
 
@@ -308,6 +329,8 @@ class VertexProgramResult:
     host_transfers: int = 0     # blocking device->host fetches during run
     algo: str = "bfs"
     labels: np.ndarray | None = None   # CC: int64[n] min-seed labels
+    overflow_retries: int = 0   # levels re-run after a truncated push/pull
+    budget: int = 0             # final edge budget the run settled on
 
     @property
     def distances(self) -> np.ndarray:
@@ -346,12 +369,17 @@ class VertexProgramRunner:
 
     def __init__(self, g: LocalGraph, program: VertexProgram | None = None,
                  sched: SchedulerConfig | None = None,
-                 init_budget: int = 1 << 15, use_pallas: bool = False):
+                 init_budget: int = 1 << 15, use_pallas: bool = False,
+                 max_overflow_retries: int | None = None):
         self.g = g
         self.program = program if program is not None else type(self).program
         self.sched = sched or SchedulerConfig()
         self.init_budget = init_budget
         self.use_pallas = use_pallas
+        # None = deepen forever (absorb overflow silently, the historical
+        # behavior); an int bounds per-wave re-runs and surfaces persistent
+        # overflow as BudgetOverflowError for the serving FT layer
+        self.max_overflow_retries = max_overflow_retries
         self._transfers = 0
         self.last_stats: dict = {}
         # fetched once here so the TEPS accounting after each run is not
@@ -372,16 +400,22 @@ class VertexProgramRunner:
         self._transfers += 1
         return np.asarray(arr)
 
-    def run(self, roots) -> VertexProgramResult:
+    def run(self, roots, *, budget: int | None = None) -> VertexProgramResult:
         # validate BEFORE the int32 cast: a >= 2**31 root must error, not
         # wrap.  This is the shared entry — every algorithm goes through it.
         roots = validate_roots(np.asarray(roots), self.g.n).astype(np.int32)
         self._transfers = 0
-        return self._finalize(self._run_packed(roots), roots)
+        return self._finalize(self._run_packed(roots, budget), roots)
 
-    def run_batch(self, roots) -> np.ndarray:
-        """Engine-protocol entry: value rows [B, n] + ``last_stats``."""
-        return self.run(roots).levels
+    def run_batch(self, roots, *, budget: int | None = None) -> np.ndarray:
+        """Engine-protocol entry: value rows [B, n] + ``last_stats``.
+
+        ``budget`` overrides ``init_budget`` for THIS wave only — the
+        serving supervisor uses it to escalate the edge budget on a retry
+        after persistent push-budget overflow, without re-tuning the
+        engine's steady-state starting point.
+        """
+        return self.run(roots, budget=budget).levels
 
     def _finalize(self, res: VertexProgramResult,
                   roots: np.ndarray) -> VertexProgramResult:
@@ -389,7 +423,9 @@ class VertexProgramRunner:
         return res
 
     # -- the extracted one-sync-per-level loop ----------------------------
-    def _run_packed(self, roots: np.ndarray) -> VertexProgramResult:
+    def _run_packed(self, roots: np.ndarray,
+                    budget_override: int | None = None
+                    ) -> VertexProgramResult:
         g, program = self.g, self.program
         b = int(roots.size)
         t0 = time.perf_counter()
@@ -400,9 +436,10 @@ class VertexProgramRunner:
         lvl = 0
         inspected = 0
         push_iters = pull_iters = 0
+        overflow_retries = 0
         # no point budgeting past the whole edge array (keeps the budgeted
         # kernels small on tiny graphs); the overflow loop still deepens
-        budget = min(self.init_budget,
+        budget = min(budget_override or self.init_budget,
                      max(g.out_indices.shape[0], g.in_indices.shape[0]) + 1)
         while not program.done(sv):
             mode = choose_mode_host(self.sched, mode, int(sv[SV_NF]),
@@ -426,6 +463,11 @@ class VertexProgramRunner:
                 budget if budgeted else 0, self.use_pallas)
             sv = self._fetch(statvec)
             while budgeted and bool(sv[SV_OVERFLOW]):
+                overflow_retries += 1   # surfaced in last_stats / result
+                if (self.max_overflow_retries is not None
+                        and overflow_retries > self.max_overflow_retries):
+                    raise BudgetOverflowError(budget, int(sv[SV_MF]),
+                                              overflow_retries)
                 budget *= 2            # HBM-reader queue overflow: deepen
                 frontier, seen, value, statvec = step(
                     g, *state0, np.int32(lvl), program, budget,
@@ -441,22 +483,25 @@ class VertexProgramRunner:
         dt = time.perf_counter() - t0
         rows = self._fetch(value[: g.n]).T           # [B, n]
         return self._result(rows, b, lvl, inspected, push_iters,
-                            pull_iters, dt)
+                            pull_iters, dt, overflow_retries, budget)
 
     def _result(self, rows, b, lvl, inspected, push_iters, pull_iters,
-                dt) -> VertexProgramResult:
+                dt, overflow_retries: int = 0,
+                budget: int = 0) -> VertexProgramResult:
         traversed = count_traversed_edges(self._out_deg_np, rows)
         res = VertexProgramResult(
             levels=rows, batch=b, iterations=lvl, edges_inspected=inspected,
             push_iters=push_iters, pull_iters=pull_iters,
             traversed_edges=traversed, seconds=dt,
-            host_transfers=self._transfers, algo=self.program.name)
+            host_transfers=self._transfers, algo=self.program.name,
+            overflow_retries=overflow_retries, budget=budget)
         self.last_stats = dict(
             iterations=res.iterations, edges_inspected=res.edges_inspected,
             push_iters=res.push_iters, pull_iters=res.pull_iters,
             batch=res.batch, traversed_edges=res.traversed_edges,
             seconds=res.seconds, host_transfers=res.host_transfers,
-            algo=res.algo)
+            algo=res.algo, overflow_retries=res.overflow_retries,
+            budget=res.budget)
         return res
 
 
@@ -543,18 +588,22 @@ class MultiSourceBFSRunner(VertexProgramRunner):
 
     def __init__(self, g: LocalGraph, sched: SchedulerConfig | None = None,
                  init_budget: int = 1 << 15, use_pallas: bool = False,
-                 packed: bool = True):
-        super().__init__(g, BFS, sched, init_budget, use_pallas)
+                 packed: bool = True,
+                 max_overflow_retries: int | None = None):
+        super().__init__(g, BFS, sched, init_budget, use_pallas,
+                         max_overflow_retries)
         self.packed = packed
 
-    def run(self, roots) -> VertexProgramResult:
+    def run(self, roots, *, budget: int | None = None) -> VertexProgramResult:
         if self.packed:
-            return super().run(roots)
+            return super().run(roots, budget=budget)
         roots = validate_roots(np.asarray(roots), self.g.n).astype(np.int32)
         self._transfers = 0
-        return self._run_boolplane(roots)
+        return self._run_boolplane(roots, budget)
 
-    def _run_boolplane(self, roots: np.ndarray) -> VertexProgramResult:
+    def _run_boolplane(self, roots: np.ndarray,
+                       budget_override: int | None = None
+                       ) -> VertexProgramResult:
         """Pre-packed-pipeline driver (bool planes + per-scalar syncs)."""
         g = self.g
         b = int(roots.size)
@@ -563,7 +612,8 @@ class MultiSourceBFSRunner(VertexProgramRunner):
         lvl = 0
         inspected = 0
         push_iters = pull_iters = 0
-        budget = self.init_budget
+        overflow_retries = 0
+        budget = budget_override or self.init_budget
         t0 = time.perf_counter()
         while True:
             n_f, m_f, m_u, n_u = _ms_iter_stats(g, frontier, seen)
@@ -582,6 +632,11 @@ class MultiSourceBFSRunner(VertexProgramRunner):
             new, seen, total, overflow = step(g, frontier, seen0, budget,
                                               self.use_pallas)
             while bool(self._fetch(overflow)):
+                overflow_retries += 1
+                if (self.max_overflow_retries is not None
+                        and overflow_retries > self.max_overflow_retries):
+                    raise BudgetOverflowError(budget, int(need),
+                                              overflow_retries)
                 budget *= 2
                 new, seen, total, overflow = step(g, frontier, seen0,
                                                   budget, self.use_pallas)
@@ -598,7 +653,7 @@ class MultiSourceBFSRunner(VertexProgramRunner):
         dt = time.perf_counter() - t0
         levels = self._fetch(level[: g.n]).T       # [B, n]
         return self._result(levels, b, lvl, inspected, push_iters,
-                            pull_iters, dt)
+                            pull_iters, dt, overflow_retries, budget)
 
 
 # ---------------------------------------------------------------------------

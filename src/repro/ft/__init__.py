@@ -1,0 +1,27 @@
+"""Fault tolerance: live serving policies + deterministic chaos harness.
+
+``failures`` holds the primitives (injection schedules, retry-from-
+checkpoint, straggler timing); ``supervisor`` wires them around the
+serving engine as the :class:`EngineSupervisor` wave policy the dynamic
+batcher delegates to.
+"""
+from repro.ft.failures import (FailureInjector, InjectedFailure, StepTimer,
+                               run_with_retries)
+from repro.ft.supervisor import (DETERMINISTIC, FAULT_KINDS, TRANSIENT,
+                                 EngineSupervisor, FaultPlan, FaultyEngine,
+                                 KernelFault, PoisonedRoot,
+                                 RequestQuarantined, RootOutcome,
+                                 ServingError, SupervisedWave,
+                                 WaveAbandoned, WaveTimeout, classify_fault,
+                                 find_tunable_engine, is_kernel_fault,
+                                 supports_budget_override)
+
+__all__ = [
+    "FailureInjector", "InjectedFailure", "StepTimer", "run_with_retries",
+    "EngineSupervisor", "SupervisedWave", "RootOutcome",
+    "FaultPlan", "FaultyEngine", "FAULT_KINDS",
+    "ServingError", "KernelFault", "WaveTimeout", "WaveAbandoned",
+    "RequestQuarantined", "PoisonedRoot",
+    "TRANSIENT", "DETERMINISTIC", "classify_fault", "is_kernel_fault",
+    "find_tunable_engine", "supports_budget_override",
+]

@@ -1,18 +1,26 @@
-"""Fault tolerance: failure injection, retry-from-checkpoint, stragglers.
+"""Fault tolerance primitives: failure injection, retry-from-checkpoint,
+straggler timing.
 
 At 1000+ nodes, the dominant failure modes are (a) preempted/crashed hosts,
-(b) slow hosts (stragglers), (c) data corruption.  The policies here are the
-single-controller analogues, exercised by tests with injected faults:
+(b) slow hosts (stragglers), (c) data corruption.  These primitives are the
+single-controller analogues, and they are LIVE policy, not documentation:
+``repro.ft.supervisor.EngineSupervisor`` wires them around the serving
+engine (``launch.dynbatch`` delegates its whole failure policy to it), and
+the chaos harness (``FaultPlan`` / ``FaultyEngine`` in the same module)
+drives them deterministically in tests and CI.
 
 * ``run_with_retries`` — wraps a step function; on failure restores the
   latest checkpoint and replays (the data pipeline is a pure function of
-  (seed, step), so replay is exact).
-* ``FailureInjector`` — deterministic fault schedule for tests/examples.
-* Stragglers: level-synchronous BFS and synchronous data-parallel training
-  both barrier per step, so mitigation = balanced partitioning (the paper's
-  hash interval scheme) + bounded per-step work (edge budgets / fixed batch
-  shapes).  ``StepTimer`` flags outlier steps so a deployment can evict
-  slow hosts (documented policy; eviction needs a cluster manager).
+  (seed, step), so replay is exact).  Exercised end-to-end against
+  ``repro.ckpt.checkpoint`` in ``tests/test_ft.py``.
+* ``FailureInjector`` — deterministic exact-once fault schedule keyed by
+  step number (the training-loop counterpart of ``FaultPlan``'s
+  wave-indexed schedule).
+* ``StepTimer`` — records step durations and flags stragglers above k× the
+  running median.  The serving supervisor feeds every engine-wave duration
+  through one of these, and derives its wave-watchdog deadline from the
+  same running median (``StepTimer.median``), so the deadline tracks the
+  measured service time instead of a hand-tuned constant.
 """
 from __future__ import annotations
 
@@ -20,7 +28,8 @@ import time
 
 
 class InjectedFailure(RuntimeError):
-    pass
+    """A fault raised by the deterministic injection machinery (transient
+    by definition: the schedule is exact-once, so a retry succeeds)."""
 
 
 class FailureInjector:
@@ -36,7 +45,13 @@ class FailureInjector:
 
 
 class StepTimer:
-    """Tracks step durations; flags stragglers above k× the running median."""
+    """Tracks step durations; flags stragglers above k× the running median.
+
+    Besides flagging, the running median is the calibration input for the
+    serving wave watchdog: ``EngineSupervisor`` deadlines a wave at
+    ``k * median`` of the recent history (clamped), so one stuck wave is
+    abandoned instead of stalling the whole batcher.
+    """
 
     def __init__(self, k: float = 3.0, window: int = 50):
         self.k = k
@@ -44,11 +59,18 @@ class StepTimer:
         self.durations: list[float] = []
         self.flags: list[int] = []
 
-    def record(self, step: int, seconds: float):
-        self.durations.append(seconds)
+    def median(self) -> float | None:
+        """Running median over the retained window (None before any
+        record) — the watchdog-deadline calibration input."""
+        if not self.durations:
+            return None
         hist = sorted(self.durations[-self.window:])
-        med = hist[len(hist) // 2]
-        if len(hist) >= 5 and seconds > self.k * med:
+        return hist[len(hist) // 2]
+
+    def record(self, step: int, seconds: float) -> bool:
+        self.durations.append(seconds)
+        med = self.median()
+        if len(self.durations[-self.window:]) >= 5 and seconds > self.k * med:
             self.flags.append(step)
             return True
         return False

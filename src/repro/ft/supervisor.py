@@ -1,0 +1,666 @@
+"""Fault-tolerant serving: the engine supervisor.
+
+ScalaBFS earns its GTEPS by keeping all 32 HBM pseudo-channels busy every
+cycle; the serving-stack analogue of one stalled channel is a hung or
+poisoned wave taking the whole ``DynamicBatcher`` down with it.  This
+module wraps any ``BFSEngine`` (the protocol in ``repro.core.bfs_local``)
+in an :class:`EngineSupervisor` that makes per-wave behavior bounded and
+typed — the property the memory-access-pattern literature (Dann & Ritter
+2021, GraphScale 2022) identifies as what graph accelerators live or die
+by under skewed inputs:
+
+* **Wave watchdog** — each engine call gets a deadline derived from the
+  recent :class:`~repro.ft.failures.StepTimer` history (``k × running
+  median``, clamped) or set explicitly; a wave that exceeds it is
+  abandoned and surfaces as a typed :class:`WaveTimeout` instead of
+  stalling the batcher forever.
+* **Typed retry with backoff** — transient faults (injected, kernel,
+  runtime) retry the whole wave up to ``max_retries`` with exponential
+  backoff; exhausted retries fail the wave's requests with
+  :class:`WaveAbandoned`.
+* **Quarantine bisection** — a wave that fails *deterministically* (bad
+  input classes: ``ValueError``/``TypeError``/…) is split in half and each
+  half retried recursively, isolating the poisoned request(s) in O(log B)
+  extra traversals so the other B−1 co-batched users still get answers.
+  The isolated root's future fails with :class:`RequestQuarantined`
+  chaining the root cause.
+* **Graceful degradation ladder** — repeated kernel faults step the engine
+  down ``pallas=True → jnp fallback → packed=False`` (per-wave by default,
+  ``sticky_demotions=True`` to keep), recording each demotion; persistent
+  push-budget overflow (``core.vertex_program.BudgetOverflowError``)
+  escalates the edge budget for the retry wave via the engine's per-wave
+  ``budget=`` override.
+* **Deterministic chaos harness** — :class:`FaultPlan` schedules
+  (wave-index, fault-kind) injections exactly once at the engine boundary
+  and :class:`FaultyEngine` is the matching test double, so chaos tests
+  and the ``benchmarks/msbfs_serving.py --chaos`` arm are fully
+  reproducible.
+
+The supervisor itself satisfies the ``BFSEngine`` protocol
+(``num_vertices`` / ``out_deg`` / ``run_batch`` / ``last_stats``) so it
+drops in front of ``DynamicBatcher`` transparently; the batcher detects it
+and delegates per-request resolution to :meth:`EngineSupervisor.run_wave`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import threading
+import time
+
+import numpy as np
+
+from repro.core import bitmap
+from repro.core.bfs_local import engine_num_vertices
+from repro.core.vertex_program import BudgetOverflowError
+from repro.ft.failures import InjectedFailure, StepTimer
+
+# ---------------------------------------------------------------------------
+# Typed error taxonomy
+# ---------------------------------------------------------------------------
+
+
+class ServingError(RuntimeError):
+    """Base of the serving fault taxonomy (every supervisor-raised error)."""
+
+
+class KernelFault(ServingError):
+    """A device-kernel (Pallas/XLA) failure — transient at wave scope, but
+    repeated occurrences drive the degradation ladder."""
+
+
+class WaveTimeout(ServingError):
+    """The wave exceeded its watchdog deadline and was abandoned."""
+
+
+class WaveAbandoned(ServingError):
+    """Transient faults persisted past ``max_retries``; the wave's
+    requests fail with this error chaining the last fault."""
+
+
+class RequestQuarantined(ServingError):
+    """Bisection isolated this root as the deterministic poison in its
+    wave; the root cause is chained as ``__cause__``."""
+
+
+class PoisonedRoot(ValueError):
+    """A request that deterministically fails its wave (test double's
+    poison marker; ``ValueError`` so it classifies as deterministic just
+    like a malformed-input rejection)."""
+
+
+TRANSIENT, DETERMINISTIC = "transient", "deterministic"
+
+# Input-shaped errors: retrying the identical wave cannot help, so the
+# supervisor bisects to isolate the poisoned request instead.
+_DETERMINISTIC_TYPES = (ValueError, TypeError, IndexError, KeyError,
+                        NotImplementedError)
+
+
+def classify_fault(exc: BaseException) -> str:
+    """Map an engine failure to the retry policy it gets.
+
+    Deterministic (bad input — bisect, don't retry): ``ValueError`` and
+    friends, the classes a malformed root / shape mismatch raises.
+    Transient (retry with backoff): everything else — injected faults,
+    kernel faults, runtime/device errors, watchdog timeouts.
+    """
+    if isinstance(exc, _DETERMINISTIC_TYPES):
+        return DETERMINISTIC
+    return TRANSIENT
+
+
+def is_kernel_fault(exc: BaseException) -> bool:
+    """Kernel-shaped failures drive the degradation ladder.
+
+    Typed :class:`KernelFault` always qualifies; otherwise best-effort
+    string matching on the exception's type/module/message for the Pallas
+    and XLA compiler/runtime fingerprints.
+    """
+    if isinstance(exc, KernelFault):
+        return True
+    if isinstance(exc, _DETERMINISTIC_TYPES):
+        return False
+    blob = (f"{type(exc).__module__}.{type(exc).__name__} "
+            f"{exc}").lower()
+    return any(tag in blob for tag in ("pallas", "xla", "mosaic", "triton"))
+
+
+def supports_budget_override(engine) -> bool:
+    """True if ``engine.run_batch`` accepts the per-wave ``budget=`` kw
+    (``VertexProgramRunner`` does; ``DistributedBFS`` does not)."""
+    try:
+        params = inspect.signature(engine.run_batch).parameters
+    except (TypeError, ValueError):
+        return False
+    if "budget" in params:
+        return True
+    return any(p.kind is inspect.Parameter.VAR_KEYWORD
+               for p in params.values())
+
+
+def find_tunable_engine(engine):
+    """Walk a wrapper chain (``.inner`` / ``._inner`` / ``.engine``) to the
+    object that owns the ``use_pallas`` / ``packed`` knobs the degradation
+    ladder turns.  Returns None when nothing in the chain is tunable."""
+    seen: set[int] = set()
+    obj = engine
+    while obj is not None and id(obj) not in seen:
+        seen.add(id(obj))
+        d = getattr(obj, "__dict__", {})
+        if "use_pallas" in d or "packed" in d:
+            return obj
+        obj = (getattr(obj, "inner", None) or getattr(obj, "_inner", None)
+               or getattr(obj, "engine", None))
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Per-wave outcome records
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RootOutcome:
+    """How one submitted root ended: a level row or a typed error."""
+
+    root: int
+    levels: np.ndarray | None = None
+    error: BaseException | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None and self.levels is not None
+
+
+@dataclasses.dataclass
+class SupervisedWave:
+    """One logical wave's fate under the supervisor's policy."""
+
+    roots: np.ndarray
+    outcomes: list[RootOutcome]
+    traversals: int = 0        # engine calls issued (retries + bisection)
+    fault_waves: int = 0       # engine calls that raised
+    retries: int = 0           # transient-fault retries
+    timeouts: int = 0          # watchdog abandonments
+    bisections: int = 0        # splits performed isolating poison
+    budget_escalations: int = 0
+    quarantined: list[int] = dataclasses.field(default_factory=list)
+    demotions: list[str] = dataclasses.field(default_factory=list)
+    seconds: float = 0.0       # engine-busy wall time incl. failed attempts
+    stats: dict = dataclasses.field(default_factory=dict)
+    _kernel_faults: int = dataclasses.field(default=0, repr=False)
+
+    @property
+    def n_ok(self) -> int:
+        return sum(o.ok for o in self.outcomes)
+
+    @property
+    def n_failed(self) -> int:
+        return len(self.outcomes) - self.n_ok
+
+    def levels(self) -> np.ndarray:
+        """Stacked [B, n] rows; raises the first typed error if any root
+        failed (the strict engine-protocol view of a partial wave)."""
+        for o in self.outcomes:
+            if o.error is not None:
+                raise o.error
+        return np.stack([o.levels for o in self.outcomes])
+
+
+# ---------------------------------------------------------------------------
+# The supervisor
+# ---------------------------------------------------------------------------
+
+
+class EngineSupervisor:
+    """Wrap a ``BFSEngine`` with watchdog + retry + bisection + degradation.
+
+    One wave at a time (the dynamic batcher's worker already serializes
+    waves); not safe for concurrent ``run_wave`` calls on one instance.
+
+    Parameters
+    ----------
+    max_retries: transient-fault retries per (sub-)wave before abandoning.
+    backoff / backoff_factor: exponential retry backoff seconds.
+    wave_deadline: explicit watchdog deadline (seconds); None derives
+        ``timer.k × running-median`` clamped to [min_deadline,
+        max_deadline] once ≥ 3 wave durations are recorded (a cold engine
+        is never deadlined — the first waves pay jit compilation).
+    watchdog: False disables deadlines entirely (engine runs inline, no
+        guard thread).
+    degrade: enable the kernel-fault demotion ladder
+        (``use_pallas → jnp → packed=False``).
+    sticky_demotions: keep demotions across waves instead of restoring the
+        engine's knobs at wave end.
+    demotion_slack: multiply the watchdog deadline by this per demotion
+        taken — the ladder's lower rungs (jnp fallback, bool-plane) are
+        known to be slower, and without slack a demoted wave would trip
+        the same watchdog that the demotion was meant to satisfy.
+    escalate_budget: retry ``BudgetOverflowError`` waves with a doubled
+        edge budget, and start later waves at the deepest budget a
+        previous wave settled on (both via ``run_batch(budget=)``).
+    pad_to_plane: pad every engine call to whole uint32 plane words so
+        bisection sub-waves reuse the jitted wave shapes.
+    timer / clock / sleep: injectable for deterministic tests.
+    """
+
+    def __init__(self, engine, *, max_retries: int = 2,
+                 backoff: float = 0.02, backoff_factor: float = 2.0,
+                 wave_deadline: float | None = None,
+                 min_deadline: float = 0.25, max_deadline: float = 60.0,
+                 watchdog: bool = True, degrade: bool = True,
+                 sticky_demotions: bool = False,
+                 demotion_slack: float = 4.0,
+                 escalate_budget: bool = True, pad_to_plane: bool = True,
+                 timer: StepTimer | None = None, clock=None, sleep=None):
+        if max_retries < 0 or backoff < 0 or backoff_factor < 1:
+            raise ValueError("need max_retries >= 0, backoff >= 0, "
+                             "backoff_factor >= 1")
+        self.engine = engine
+        self.max_retries = int(max_retries)
+        self.backoff = float(backoff)
+        self.backoff_factor = float(backoff_factor)
+        self.wave_deadline = wave_deadline
+        self.min_deadline = float(min_deadline)
+        self.max_deadline = float(max_deadline)
+        self.watchdog = bool(watchdog)
+        self.degrade = bool(degrade)
+        self.sticky_demotions = bool(sticky_demotions)
+        self.demotion_slack = float(demotion_slack)
+        self._deadline_scale = 1.0
+        self.escalate_budget = bool(escalate_budget)
+        self.pad_to_plane = bool(pad_to_plane)
+        self.timer = timer if timer is not None else StepTimer(k=4.0)
+        self.clock = time.monotonic if clock is None else clock
+        self.sleep = time.sleep if sleep is None else sleep
+        self._supports_budget = supports_budget_override(engine)
+        self._tunable = find_tunable_engine(engine)
+        self._budget_hint: int | None = None
+        self._zombie: threading.Thread | None = None
+        self.last_stats: dict = {}
+        # lifetime counters (stats() snapshot)
+        self._n_waves = self._n_traversals = self._n_fault_waves = 0
+        self._n_retries = self._n_timeouts = self._n_bisections = 0
+        self._n_budget_escalations = self._n_stragglers = 0
+        self._quarantined: list[int] = []
+        self._demotions: list[str] = []
+
+    # -- BFSEngine protocol ----------------------------------------------
+
+    @property
+    def num_vertices(self) -> int | None:
+        return engine_num_vertices(self.engine)
+
+    @property
+    def out_deg(self):
+        return getattr(self.engine, "out_deg", None)
+
+    def run_batch(self, roots) -> np.ndarray:
+        """Strict protocol entry: all-or-error view of a supervised wave.
+
+        Prefer :meth:`run_wave` for per-request outcomes (what
+        ``DynamicBatcher`` uses); this raises the first root's typed error
+        when any request failed.
+        """
+        return self.run_wave(roots).levels()
+
+    # -- watchdog deadline ------------------------------------------------
+
+    def current_deadline(self) -> float | None:
+        """The deadline the NEXT engine call would get (None = no guard).
+
+        Scaled by ``demotion_slack`` per demotion taken this wave: a
+        demoted engine is expected slower, and an unscaled deadline would
+        time out the very fallback the ladder just switched to.
+        """
+        if not self.watchdog:
+            return None
+        if self.wave_deadline is not None:
+            return float(self.wave_deadline) * self._deadline_scale
+        med = self.timer.median()
+        if med is None or len(self.timer.durations) < 3:
+            return None               # cold engine: compilation is not a hang
+        return min(max(self.timer.k * med, self.min_deadline),
+                   self.max_deadline) * self._deadline_scale
+
+    # -- the supervised wave ---------------------------------------------
+
+    def run_wave(self, roots) -> SupervisedWave:
+        """Serve a wave of roots under the full fault policy.
+
+        EVERY root resolves: ``outcomes[i]`` carries either its level row
+        or a typed error (``WaveTimeout`` / ``WaveAbandoned`` /
+        ``RequestQuarantined`` / the original deterministic error for a
+        singleton wave).  Never raises for engine failures.
+        """
+        roots = np.asarray(roots)
+        wave = SupervisedWave(
+            roots=roots,
+            outcomes=[RootOutcome(int(r)) for r in roots])
+        snapshot = self._snapshot_knobs()
+        try:
+            self._serve(wave, roots, wave.outcomes)
+        finally:
+            if not self.sticky_demotions:
+                self._restore_knobs(snapshot)
+                self._deadline_scale = 1.0
+        self._n_waves += 1
+        self._n_traversals += wave.traversals
+        self._n_fault_waves += wave.fault_waves
+        self._n_retries += wave.retries
+        self._n_timeouts += wave.timeouts
+        self._n_bisections += wave.bisections
+        self._n_budget_escalations += wave.budget_escalations
+        self._quarantined.extend(wave.quarantined)
+        self._demotions.extend(wave.demotions)
+        self.last_stats = dict(wave.stats, ft_traversals=wave.traversals,
+                               ft_retries=wave.retries,
+                               ft_quarantined=len(wave.quarantined))
+        return wave
+
+    def _serve(self, wave: SupervisedWave, roots: np.ndarray,
+               outcomes: list[RootOutcome]):
+        """Retry-then-bisect policy for one (sub-)wave, resolving every
+        outcome in place."""
+        tries = 0
+        delay = self.backoff
+        budget = self._budget_hint
+        while True:
+            wave.traversals += 1
+            try:
+                rows, stats, dt = self._attempt(roots, budget)
+            except Exception as exc:      # noqa: BLE001 — policy boundary
+                wave.fault_waves += 1
+                wave.seconds += self._last_attempt_seconds
+                if classify_fault(exc) == DETERMINISTIC:
+                    if len(outcomes) == 1:
+                        root = outcomes[0].root
+                        wave.quarantined.append(root)
+                        err = RequestQuarantined(
+                            f"root {root} isolated by bisection: "
+                            f"{type(exc).__name__}: {exc}")
+                        err.__cause__ = exc
+                        outcomes[0].error = err
+                        return
+                    # bisect: isolate the poison in O(log B) sub-waves so
+                    # the clean co-batched requests still get answers
+                    mid = len(outcomes) // 2
+                    wave.bisections += 1
+                    self._serve(wave, roots[:mid], outcomes[:mid])
+                    self._serve(wave, roots[mid:], outcomes[mid:])
+                    return
+                # transient fault: retry with backoff, possibly demoted
+                if isinstance(exc, WaveTimeout):
+                    wave.timeouts += 1
+                if is_kernel_fault(exc):
+                    wave._kernel_faults += 1
+                    if self.degrade and wave._kernel_faults >= 2:
+                        demoted = self._demote()
+                        if demoted:
+                            wave.demotions.append(demoted)
+                if (isinstance(exc, BudgetOverflowError)
+                        and self.escalate_budget):
+                    budget = 2 * max(budget or 0, exc.budget)
+                    wave.budget_escalations += 1
+                tries += 1
+                if tries > self.max_retries:
+                    for o in outcomes:
+                        if o.error is None and o.levels is None:
+                            err = WaveAbandoned(
+                                f"wave of {len(outcomes)} roots abandoned "
+                                f"after {tries} attempts: "
+                                f"{type(exc).__name__}: {exc}")
+                            err.__cause__ = exc
+                            o.error = err
+                    return
+                wave.retries += 1
+                self._backoff_wait(delay)
+                delay *= self.backoff_factor
+            else:
+                wave.seconds += dt
+                wave.stats = stats
+                if (self.escalate_budget
+                        and stats.get("overflow_retries", 0) > 0
+                        and stats.get("budget", 0) > 0):
+                    # the wave deepened mid-flight: start later waves at
+                    # the budget it settled on instead of re-deepening
+                    self._budget_hint = int(stats["budget"])
+                for o, row in zip(outcomes, rows):
+                    o.levels = np.ascontiguousarray(row)
+                return
+
+    # -- one guarded engine call ------------------------------------------
+
+    def _call_engine(self, slots, budget):
+        if budget is not None and self._supports_budget:
+            return self.engine.run_batch(slots, budget=int(budget))
+        return self.engine.run_batch(slots)
+
+    def _attempt(self, roots: np.ndarray, budget: int | None):
+        """One engine traversal with the watchdog armed; pads to plane
+        words so bisection sub-waves hit already-jitted shapes."""
+        slots, b = (bitmap.pad_plane_slots(roots) if self.pad_to_plane
+                    else (roots, len(roots)))
+        deadline = self.current_deadline()
+        self._last_attempt_seconds = 0.0
+        t0 = time.perf_counter()
+        try:
+            if deadline is None:
+                levels = self._call_engine(slots, budget)
+            else:
+                box: dict = {}
+                done = threading.Event()
+
+                def work():
+                    try:
+                        box["levels"] = self._call_engine(slots, budget)
+                    except BaseException as e:  # noqa: BLE001
+                        box["exc"] = e
+                    finally:
+                        done.set()
+
+                th = threading.Thread(target=work, daemon=True,
+                                      name="supervised-wave")
+                th.start()
+                if not done.wait(deadline):
+                    # abandon: the guard thread may still finish later;
+                    # its result is discarded and the next backoff joins it
+                    self._zombie = th
+                    raise WaveTimeout(
+                        f"wave of {len(roots)} roots exceeded the "
+                        f"{deadline:.3f}s watchdog deadline")
+                if "exc" in box:
+                    raise box["exc"]
+                levels = box["levels"]
+        finally:
+            self._last_attempt_seconds = time.perf_counter() - t0
+        dt = self._last_attempt_seconds
+        if self.timer.record(len(self.timer.durations), dt):
+            self._n_stragglers += 1
+        stats = dict(getattr(self.engine, "last_stats", {}) or {})
+        rows = np.asarray(levels)
+        if self.pad_to_plane:
+            rows = bitmap.slice_plane_rows(rows, b)
+        return rows, stats, dt
+
+    def _backoff_wait(self, delay: float):
+        """Back off before a retry; if a timed-out wave's guard thread is
+        still running, spend the backoff joining it (keeps the engine from
+        seeing two concurrent waves in the common case)."""
+        z = self._zombie
+        if z is not None and z.is_alive():
+            z.join(delay if delay > 0 else None)
+        elif delay > 0:
+            self.sleep(delay)
+        if z is not None and not z.is_alive():
+            self._zombie = None
+
+    # -- degradation ladder ----------------------------------------------
+
+    def _snapshot_knobs(self) -> dict:
+        t = self._tunable
+        if t is None:
+            return {}
+        return {k: getattr(t, k) for k in ("use_pallas", "packed")
+                if k in getattr(t, "__dict__", {})}
+
+    def _restore_knobs(self, snapshot: dict):
+        for k, v in snapshot.items():
+            setattr(self._tunable, k, v)
+
+    def _demote(self) -> str | None:
+        """Step the engine one rung down the ladder; returns the demotion
+        label, or None when the bottom is reached / nothing is tunable."""
+        t = self._tunable
+        if t is None:
+            return None
+        if getattr(t, "use_pallas", False):
+            t.use_pallas = False
+            self._deadline_scale *= self.demotion_slack
+            return "pallas->jnp"
+        if getattr(t, "packed", False):
+            t.packed = False
+            self._deadline_scale *= self.demotion_slack
+            return "packed->boolplane"
+        return None
+
+    # -- reporting ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Lifetime supervisor counters (JSON-friendly)."""
+        out = dict(
+            waves=self._n_waves, traversals=self._n_traversals,
+            fault_waves=self._n_fault_waves, retries=self._n_retries,
+            timeouts=self._n_timeouts, bisections=self._n_bisections,
+            budget_escalations=self._n_budget_escalations,
+            stragglers=self._n_stragglers,
+            quarantined=list(self._quarantined),
+            demotions=list(self._demotions),
+        )
+        dl = self.current_deadline()
+        if dl is not None:
+            out["wave_deadline"] = round(float(dl), 4)
+        if self._budget_hint is not None:
+            out["budget_hint"] = int(self._budget_hint)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Deterministic chaos harness
+# ---------------------------------------------------------------------------
+
+FAULT_KINDS = ("kernel", "runtime", "stuck")
+
+
+class FaultPlan:
+    """Exact-once (engine-call index -> fault kind) schedule.
+
+    The index counts ENGINE CALLS at the supervised boundary — retries and
+    bisection sub-waves advance it too, so a schedule pins faults to a
+    reproducible point of the serving run regardless of wall clock.
+    """
+
+    def __init__(self, faults=()):
+        self._faults: dict[int, str] = {}
+        for idx, kind in faults:
+            if kind not in FAULT_KINDS:
+                raise ValueError(
+                    f"unknown fault kind {kind!r}; have {FAULT_KINDS}")
+            if int(idx) in self._faults:
+                raise ValueError(f"duplicate fault at wave index {idx}")
+            self._faults[int(idx)] = kind
+        self.injected: list[tuple[int, str]] = []
+
+    @classmethod
+    def random(cls, horizon: int, rate: float, *,
+               kinds=("kernel", "runtime"), seed: int = 0) -> "FaultPlan":
+        """Bernoulli(rate) fault per wave index over ``horizon`` calls,
+        cycling through ``kinds`` — deterministic given ``seed``."""
+        rng = np.random.default_rng(seed)
+        hits = np.flatnonzero(rng.random(int(horizon)) < rate)
+        return cls([(int(i), kinds[k % len(kinds)])
+                    for k, i in enumerate(hits)])
+
+    def pop(self, idx: int) -> str | None:
+        kind = self._faults.pop(int(idx), None)
+        if kind is not None:
+            self.injected.append((int(idx), kind))
+        return kind
+
+    def pending(self) -> dict[int, str]:
+        return dict(self._faults)
+
+    def __len__(self) -> int:
+        return len(self._faults)
+
+
+class FaultyEngine:
+    """BFSEngine-protocol chaos test double wrapping a real engine.
+
+    Injects, at the engine boundary the supervisor guards:
+
+    * plan-scheduled faults — ``kernel`` raises :class:`KernelFault`,
+      ``runtime`` raises :class:`InjectedFailure`, ``stuck`` stalls
+      ``stall_seconds`` before serving (tripping the watchdog when the
+      deadline is shorter);
+    * poisoned roots — any wave containing one raises
+      :class:`PoisonedRoot` (deterministic, every time), which the
+      supervisor isolates by bisection;
+    * ``break_pallas=True`` — raises :class:`KernelFault` whenever the
+      underlying engine still has ``use_pallas`` enabled, emulating a
+      broken kernel toolchain until the ladder demotes to the jnp
+      fallback.
+
+    The inner engine is called under a lock so a timed-out (zombie) wave
+    finishing late never overlaps a retry's traversal.
+    """
+
+    def __init__(self, inner, plan: FaultPlan | None = None, *,
+                 poisoned_roots=(), stall_seconds: float = 0.25,
+                 break_pallas: bool = False, sleep=None):
+        self.inner = inner
+        self.plan = plan if plan is not None else FaultPlan()
+        self.poisoned = {int(r) for r in poisoned_roots}
+        self.stall_seconds = float(stall_seconds)
+        self.break_pallas = bool(break_pallas)
+        self.sleep = time.sleep if sleep is None else sleep
+        self.calls = 0
+        self._lock = threading.Lock()
+        self._supports_budget = supports_budget_override(inner)
+
+    # protocol passthrough
+    @property
+    def num_vertices(self):
+        return engine_num_vertices(self.inner)
+
+    @property
+    def out_deg(self):
+        return getattr(self.inner, "out_deg", None)
+
+    @property
+    def last_stats(self):
+        return getattr(self.inner, "last_stats", {})
+
+    def run_batch(self, roots, *, budget: int | None = None) -> np.ndarray:
+        idx = self.calls
+        self.calls += 1
+        hit = self.poisoned.intersection(int(r) for r in np.asarray(roots))
+        if hit:
+            raise PoisonedRoot(
+                f"poisoned root(s) {sorted(hit)} in wave {idx}")
+        tunable = find_tunable_engine(self.inner)
+        if self.break_pallas and getattr(tunable, "use_pallas", False):
+            raise KernelFault(
+                f"pallas lowering failed at wave {idx} (break_pallas)")
+        kind = self.plan.pop(idx)
+        if kind == "kernel":
+            raise KernelFault(f"injected kernel fault at wave {idx}")
+        if kind == "runtime":
+            raise InjectedFailure(f"injected runtime fault at wave {idx}")
+        if kind == "stuck":
+            self.sleep(self.stall_seconds)
+        with self._lock:
+            if budget is not None and self._supports_budget:
+                return self.inner.run_batch(roots, budget=budget)
+            return self.inner.run_batch(roots)

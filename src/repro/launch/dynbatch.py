@@ -24,6 +24,17 @@ the ~21x batch-32 win.  This module closes that gap (the ROADMAP's
 * Backpressure: the request queue is bounded (``max_pending``); ``submit``
   blocks (threaded mode) or raises ``QueueFull``.  ``close(drain=True)``
   flushes every pending request into final waves before shutting down.
+* Fault tolerance: hand the batcher an ``repro.ft.EngineSupervisor``
+  (wrapping the real engine) and the worker loop delegates its WHOLE
+  failure policy to it — watchdog deadlines, typed retry with backoff,
+  quarantine bisection of poisoned roots, and the kernel degradation
+  ladder.  Every future then resolves with either its levels or a typed
+  error from the ``repro.ft`` taxonomy (``WaveTimeout`` /
+  ``WaveAbandoned`` / ``RequestQuarantined``); nothing hangs and nothing
+  retries unboundedly.  Without a supervisor the legacy policy applies:
+  a deterministic (input-shaped) dispatch error isolates per-request with
+  a hard cap of ONE singleton retry per request, and transient errors
+  fail the wave's futures immediately.
 
 Works in front of both engines returned by ``launch.serve.build_bfs_engine``:
 the local ``MultiSourceBFSRunner`` and the sharded ``DistributedBFS``.
@@ -39,6 +50,8 @@ import numpy as np
 
 from repro.core import (bitmap, count_traversed_edges, engine_num_vertices,
                         validate_roots)
+from repro.ft.supervisor import (DETERMINISTIC, EngineSupervisor,
+                                 classify_fault)
 
 
 class QueueFull(RuntimeError):
@@ -64,7 +77,14 @@ class WaveStats:
     pull_iters: int
     traversed_edges: int | None  # paper §VI-A metric over the REAL requests
     latencies: list[float] = dataclasses.field(default_factory=list)
-    error: str | None = None
+    error: str | None = None    # set when the WHOLE wave failed
+    # fault-tolerance accounting (supervised waves; zero on the legacy path)
+    failed: int = 0             # requests resolved with a typed error
+    traversals: int = 0         # engine calls incl. retries + bisection
+    retries: int = 0
+    timeouts: int = 0
+    quarantined: list[int] = dataclasses.field(default_factory=list)
+    demotions: list[str] = dataclasses.field(default_factory=list)
 
     @property
     def aggregate_teps(self) -> float | None:
@@ -86,10 +106,27 @@ class BFSFuture:
         self._exc: BaseException | None = None
 
     def done(self) -> bool:
+        """True once the future resolved — with levels OR a typed error.
+        Poll with :meth:`exception` to see which without raising."""
         return self._event.is_set()
 
+    def exception(self, timeout: float | None = 0) -> BaseException | None:
+        """The typed error this request resolved with, without raising.
+
+        Returns None while the request is still pending (disambiguate with
+        :meth:`done`) or when it succeeded.  ``timeout`` bounds how long to
+        wait for resolution (default 0: pure poll).
+        """
+        self._event.wait(timeout)
+        return self._exc
+
     def result(self, timeout: float | None = None) -> np.ndarray:
-        """Level vector int64-compatible [|V|] for this root's traversal."""
+        """Level vector int64-compatible [|V|] for this root's traversal.
+
+        A future whose wave was abandoned/quarantined raises its typed
+        error (``repro.ft`` taxonomy) as soon as the wave resolves it —
+        never blocking out the full ``timeout``.
+        """
         if not self._event.wait(timeout):
             raise TimeoutError(
                 f"BFS query for root {self.root} not served in {timeout}s")
@@ -132,6 +169,11 @@ class DynamicBatcher:
             raise ValueError("need max_batch >= 1, max_pending >= 1, "
                              "window >= 0")
         self.engine = engine
+        # an EngineSupervisor engine moves the whole failure policy (typed
+        # retries, watchdog, bisection, degradation) out of this worker
+        # loop: _dispatch delegates to supervisor.run_wave per-request
+        self.supervisor = engine if isinstance(engine, EngineSupervisor) \
+            else None
         self.window = float(window)
         self.max_batch = int(max_batch)
         self.max_pending = int(max_pending)
@@ -150,6 +192,7 @@ class DynamicBatcher:
         self.waves: deque[WaveStats] = deque(maxlen=stats_history)
         self._n_waves = self._n_errors = 0
         self._n_requests = 0              # requests in error-free waves
+        self._n_failed = 0                # requests resolved w/ typed error
         self._busy_seconds = 0.0
         self._traversed = 0
         self._pending: deque[BFSFuture] = deque()
@@ -296,6 +339,8 @@ class DynamicBatcher:
     # -- dispatch ---------------------------------------------------------
 
     def _dispatch(self, futures: list[BFSFuture]) -> WaveStats:
+        if self.supervisor is not None:
+            return self._dispatch_supervised(futures)
         roots = np.asarray([f.root for f in futures], np.int64)
         b = len(futures)
         slots = roots
@@ -325,10 +370,16 @@ class DynamicBatcher:
             ws.seconds = time.perf_counter() - t0
             ws.error = f"{type(exc).__name__}: {exc}"
             self._record(ws)
-            if isinstance(exc, ValueError) and len(futures) > 1:
+            if classify_fault(exc) == DETERMINISTIC and len(futures) > 1:
                 # a root rejected at dispatch time (possible when submit
                 # had no |V| to validate against) must not fail its
-                # co-batched neighbors: retry each request as its own wave
+                # co-batched neighbors: isolate each request as its own
+                # singleton wave.  CAPPED: the len > 1 guard means a
+                # failing singleton fails its future outright — no
+                # request is ever retried more than once, and transient
+                # faults never take this path (they fail the wave's
+                # futures below; wrap the engine in an EngineSupervisor
+                # for retry/backoff/bisection policy instead).
                 for f in futures:
                     self._dispatch([f])
                 return ws
@@ -347,14 +398,75 @@ class DynamicBatcher:
             f._resolve(np.ascontiguousarray(lv), ws, lat)
         return ws
 
+    def _dispatch_supervised(self, futures: list[BFSFuture]) -> WaveStats:
+        """Delegate the wave's failure policy to the EngineSupervisor.
+
+        ``run_wave`` never raises for engine faults: it returns one
+        outcome per root (levels or typed error), after applying the
+        watchdog / typed-retry / bisection / degradation policy.  This
+        worker only books stats and resolves futures.
+        """
+        roots = np.asarray([f.root for f in futures], np.int64)
+        b = len(futures)
+        n_slots = (bitmap.num_words(b) * bitmap.WORD_BITS
+                   if self.supervisor.pad_to_plane else b)
+        ws = WaveStats(wave_id=self._n_waves, batch=b, n_slots=n_slots,
+                       t_start=self.clock(), seconds=0.0, iterations=0,
+                       edges_inspected=0, push_iters=0, pull_iters=0,
+                       traversed_edges=None)
+        try:
+            wave = self.supervisor.run_wave(roots)
+        except Exception as exc:  # defensive: run_wave absorbs engine faults
+            ws.error = f"{type(exc).__name__}: {exc}"
+            ws.failed = b
+            self._record(ws)
+            for f in futures:
+                f._fail(exc)
+            return ws
+        # engine-busy seconds only (excludes retry backoff sleeps), so
+        # aggregate TEPS over busy time stays comparable with the
+        # unsupervised path
+        ws.seconds = wave.seconds
+        st = wave.stats
+        ws.iterations = int(st.get("iterations", 0))
+        ws.edges_inspected = int(st.get("edges_inspected", 0))
+        ws.push_iters = int(st.get("push_iters", 0))
+        ws.pull_iters = int(st.get("pull_iters", 0))
+        ws.failed = wave.n_failed
+        ws.traversals = wave.traversals
+        ws.retries = wave.retries
+        ws.timeouts = wave.timeouts
+        ws.quarantined = list(wave.quarantined)
+        ws.demotions = list(wave.demotions)
+        if ws.failed == b:
+            first = next(o.error for o in wave.outcomes
+                         if o.error is not None)
+            ws.error = f"{type(first).__name__}: {first}"
+        ok_rows = [o.levels for o in wave.outcomes if o.ok]
+        if self.out_deg is not None and ok_rows:
+            ws.traversed_edges = count_traversed_edges(
+                self.out_deg, np.stack(ok_rows))
+        t_res = self.clock()
+        for f in futures:
+            ws.latencies.append(t_res - f.t_submit)
+        self._record(ws)
+        for f, o in zip(futures, wave.outcomes):
+            if o.ok:
+                f._resolve(o.levels, ws, t_res - f.t_submit)
+            else:
+                f.wave = ws
+                f._fail(o.error)
+        return ws
+
     def _record(self, ws: WaveStats):
         with self._cond:
             self.waves.append(ws)
             self._n_waves += 1
+            self._n_failed += ws.failed
             if ws.error is not None:
                 self._n_errors += 1
             else:
-                self._n_requests += ws.batch
+                self._n_requests += ws.batch - ws.failed
                 self._busy_seconds += ws.seconds
                 self._traversed += ws.traversed_edges or 0
 
@@ -369,6 +481,7 @@ class DynamicBatcher:
             n_waves, n_errors = self._n_waves, self._n_errors
             n_req, busy = self._n_requests, self._busy_seconds
             traversed = self._traversed
+            n_failed = self._n_failed
         n_ok = n_waves - n_errors
         lats = np.asarray([l for w in waves if w.error is None
                            for l in w.latencies], np.float64)
@@ -377,6 +490,10 @@ class DynamicBatcher:
             mean_batch=round(n_req / n_ok, 2) if n_ok else 0.0,
             busy_seconds=round(busy, 4),
         )
+        if n_failed:
+            out["requests_failed"] = n_failed
+        if self.supervisor is not None:
+            out["fault_tolerance"] = self.supervisor.stats()
         if self.out_deg is not None:   # without degrees TEPS is unknowable
             out.update(traversed_edges=int(traversed),
                        aggregate_teps=round(traversed / max(busy, 1e-12),
@@ -402,15 +519,18 @@ def plane_wave_sizes(max_batch: int) -> list[int]:
 
 
 def drive_open_loop(batcher: DynamicBatcher, roots, rate: float | None = None,
-                    rng: np.random.Generator | None = None
-                    ) -> list[BFSFuture]:
+                    rng: np.random.Generator | None = None,
+                    raise_errors: bool = True) -> list[BFSFuture]:
     """Submit ``roots`` open-loop, drain the batcher, return the futures.
 
     With ``rate`` (req/s) arrivals follow a Poisson process against an
     ABSOLUTE schedule — sleeping a fresh exponential gap per request would
     add the submit overhead on top of every gap and systematically
     undershoot the requested rate.  ``rate=None`` submits back-to-back.
-    Raises the wave's error if any request failed.
+    Raises the wave's error if any request failed; ``raise_errors=False``
+    (the chaos arms) only asserts every future RESOLVED — with levels or a
+    typed error — so injected faults don't abort the run but a hang still
+    surfaces as ``TimeoutError``.
     """
     roots = np.asarray(roots)
     if rate:
@@ -427,5 +547,9 @@ def drive_open_loop(batcher: DynamicBatcher, roots, rate: float | None = None,
         futures.append(batcher.submit(int(r)))
     batcher.close(drain=True)
     for f in futures:
-        f.result(timeout=0)        # drained => resolved; surface errors
+        if raise_errors:
+            f.result(timeout=0)    # drained => resolved; surface errors
+        elif not f.done():         # resolution (either way) is mandatory
+            raise TimeoutError(
+                f"request for root {f.root} never resolved after drain")
     return futures

@@ -197,16 +197,28 @@ def serve_bfs(graph: str, batch: int, seed: int = 0,
 
 def serve_bfs_async(graph: str, requests: int = 64, window: float = 0.05,
                     max_batch: int = 32, rate: float | None = None,
-                    seed: int = 0, algo: str = "bfs") -> dict:
+                    seed: int = 0, algo: str = "bfs",
+                    ft_max_retries: int | None = None,
+                    ft_wave_deadline: float | None = None,
+                    ft_chaos: float | None = None) -> dict:
     """Serve a stream of single-root queries through the dynamic batcher.
 
     ``rate`` (req/s) spaces submissions with exponential inter-arrival
     sleeps (open-loop Poisson); ``rate=None`` submits as fast as possible.
     ``algo`` picks the vertex program — the batcher itself is
     engine-agnostic (the ``BFSEngine`` protocol), so CC and SSSP waves
-    coalesce exactly like BFS waves.  Returns the batcher's aggregate
-    stats (waves, mean batch, latency p50/p99, aggregate TEPS over busy
-    time) as a JSON-friendly dict.
+    coalesce exactly like BFS waves.
+
+    Fault tolerance: ``ft_max_retries`` / ``ft_wave_deadline`` wrap the
+    engine in an ``EngineSupervisor`` (typed retries, quarantine
+    bisection, watchdog, degradation ladder); ``ft_chaos`` additionally
+    interposes a ``FaultyEngine`` injecting faults at that per-wave rate
+    so the policies can be watched firing against a live stream.  With a
+    supervisor, the returned stats carry a ``fault_tolerance`` block and
+    failed requests resolve with typed errors instead of raising here.
+
+    Returns the batcher's aggregate stats (waves, mean batch, latency
+    p50/p99, aggregate TEPS over busy time) as a JSON-friendly dict.
     """
     from repro.launch.dynbatch import (DynamicBatcher, drive_open_loop,
                                        plane_wave_sizes)
@@ -216,8 +228,23 @@ def serve_bfs_async(graph: str, requests: int = 64, window: float = 0.05,
     roots = rng.choice(np.flatnonzero(deg > 0), requests, replace=True)
     for m in plane_wave_sizes(max_batch):      # warm-up / compile
         bfs_batch(np.resize(roots, m), engine=engine, out_deg=deg)
-    batcher = DynamicBatcher(engine, window=window, max_batch=max_batch)
-    drive_open_loop(batcher, roots, rate=rate, rng=rng)
+    supervised = (ft_max_retries is not None or ft_wave_deadline is not None
+                  or ft_chaos is not None)
+    if supervised:
+        from repro.ft import EngineSupervisor, FaultPlan, FaultyEngine
+        if ft_chaos:
+            # rough horizon: every request could end up a singleton wave
+            plan = FaultPlan.random(max(2 * requests, 16), ft_chaos,
+                                    seed=seed)
+            engine = FaultyEngine(engine, plan)
+        engine = EngineSupervisor(
+            engine,
+            max_retries=2 if ft_max_retries is None else ft_max_retries,
+            wave_deadline=ft_wave_deadline)
+    batcher = DynamicBatcher(engine, out_deg=deg, window=window,
+                             max_batch=max_batch)
+    drive_open_loop(batcher, roots, rate=rate, rng=rng,
+                    raise_errors=not supervised)
     out = batcher.stats()
     out.update(graph=graph, algo=algo, requests=requests, window=window,
                max_batch=max_batch, rate=rate)
@@ -253,6 +280,16 @@ def main():
     ap.add_argument("--bfs-rate", type=float,
                     help="open-loop Poisson arrival rate in req/s "
                          "(default: submit as fast as possible)")
+    ap.add_argument("--ft-max-retries", type=int,
+                    help="wrap the engine in an EngineSupervisor with this "
+                         "transient-retry cap (async serving only)")
+    ap.add_argument("--ft-wave-deadline", type=float,
+                    help="fixed wave-watchdog deadline in seconds "
+                         "(default: auto-calibrated from the running "
+                         "median wave time); implies supervision")
+    ap.add_argument("--ft-chaos", type=float,
+                    help="inject faults at this per-wave rate through the "
+                         "deterministic chaos engine (implies supervision)")
     args = ap.parse_args()
     algo = args.algo or "bfs"
     if args.algo and not args.bfs_graph:
@@ -263,7 +300,10 @@ def main():
         out = serve_bfs_async(args.bfs_graph, requests=args.bfs_requests,
                               window=args.bfs_window,
                               max_batch=args.bfs_max_batch,
-                              rate=args.bfs_rate, algo=algo)
+                              rate=args.bfs_rate, algo=algo,
+                              ft_max_retries=args.ft_max_retries,
+                              ft_wave_deadline=args.ft_wave_deadline,
+                              ft_chaos=args.ft_chaos)
     elif args.bfs_graph:
         out = serve_bfs(args.bfs_graph, args.bfs_batch)
     elif args.arch:

@@ -1,0 +1,180 @@
+"""Chaos acceptance: the fault-tolerant serving stack on a real graph.
+
+A fake-clock ``DynamicBatcher`` drives ``EngineSupervisor`` over a
+``FaultyEngine`` wrapping the real MS-BFS runner on rmat16-16, with a
+deterministic fault mix — an injected kernel fault, one stuck wave that
+trips the watchdog, and one poisoned root isolated by bisection — over
+96 single-root requests.  Every future must resolve (levels or a typed
+error), every non-poisoned answer must equal the fault-free reference,
+the poison must quarantine within the ceil(log2 B)+1 bisection bound,
+and a forced Pallas failure must demote to the jnp fallback with
+oracle-matching rows.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import MultiSourceBFSRunner, build_local_graph
+from repro.ft import (EngineSupervisor, FaultPlan, FaultyEngine,
+                      RequestQuarantined)
+from repro.graph import get_dataset
+from repro.launch.dynbatch import DynamicBatcher
+
+GRAPH = "rmat16-16"
+B = 32                   # wave width = one plane word
+REQUESTS = 3 * B         # >= 64, three full waves
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += float(dt)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Graph + warmed runner + request stream + fault-free reference."""
+    ds = get_dataset(GRAPH)
+    g = build_local_graph(ds.csr, ds.csc)
+    deg = np.diff(ds.csr.indptr)
+    rng = np.random.default_rng(0)
+    reachable = np.flatnonzero(deg > 0)
+    roots = rng.choice(reachable, REQUESTS, replace=True).astype(np.int64)
+    poison = int(np.setdiff1d(reachable, roots)[0])
+    roots[B + B // 2] = poison          # one poisoned request, wave 2
+    runner = MultiSourceBFSRunner(g)
+    runner.run(np.resize(roots, B))     # warm the packed 32-slot shape
+    ref = {}
+    for lo in range(0, REQUESTS, B):
+        wave = np.resize(roots[lo:lo + B], B)
+        for r, row in zip(wave, runner.run(wave).levels):
+            ref[int(r)] = np.asarray(row, np.int64).copy()
+    return dict(runner=runner, deg=deg, roots=roots, poison=poison,
+                ref=ref)
+
+
+def test_chaos_stream_resolves_everything_correctly(served):
+    """96 requests under kernel fault + stuck wave + poisoned root."""
+    runner, deg = served["runner"], served["deg"]
+    roots, poison, ref = served["roots"], served["poison"], served["ref"]
+
+    chaos = FaultyEngine(runner, FaultPlan(), poisoned_roots=[poison],
+                         stall_seconds=2.5)
+    sup = EngineSupervisor(chaos, max_retries=3, backoff=0.01,
+                           wave_deadline=1.0, degrade=False)
+    clock = FakeClock()
+    b = DynamicBatcher(sup, out_deg=deg, window=1.0, max_batch=B,
+                       clock=clock)
+    futures = []
+    # wave 1: an injected kernel fault on its first traversal (retried)
+    chaos.plan = FaultPlan([(chaos.calls, "kernel")])
+    futures += [b.submit(int(r), block=False) for r in roots[:B]]
+    assert len(b.flush()) == 1
+    # wave 2: contains the poisoned root (isolated by bisection)
+    futures += [b.submit(int(r), block=False) for r in roots[B:2 * B]]
+    assert len(b.flush()) == 1
+    # wave 3: stuck — stalls past the watchdog deadline, retried clean
+    chaos.plan = FaultPlan([(chaos.calls, "stuck")])
+    futures += [b.submit(int(r), block=False) for r in roots[2 * B:]]
+    assert len(b.flush()) == 1
+    b.close()
+    z = sup._zombie                     # the abandoned stuck traversal
+    if z is not None:
+        z.join(30.0)
+
+    # every future resolved: levels or a typed error, zero hangs
+    assert all(f.done() for f in futures)
+    n_quarantined = 0
+    for f, r in zip(futures, roots.tolist()):
+        exc = f.exception()
+        if int(r) == poison:
+            assert isinstance(exc, RequestQuarantined)
+            n_quarantined += 1
+        else:
+            # differential: non-poisoned answers match fault-free levels
+            assert exc is None, f"clean root {r} failed: {exc!r}"
+            np.testing.assert_array_equal(
+                np.asarray(f.result(), np.int64), ref[int(r)])
+    assert n_quarantined == 1
+
+    s = b.stats()
+    assert s["requests"] == REQUESTS - 1 and s["requests_failed"] == 1
+    ft = s["fault_tolerance"]
+    assert ft["quarantined"] == [poison]
+    assert ft["timeouts"] >= 1          # the stuck wave tripped the watchdog
+    assert ft["retries"] >= 2           # kernel fault + stuck both retried
+    assert chaos.plan.pending() == {}   # every scheduled fault fired
+    # the poison wave stayed within the bisection budget
+    bound = math.ceil(math.log2(B)) + 1
+    assert ft["fault_waves"] <= 1 + 1 + bound   # kernel + stuck + bisection
+    assert ft["bisections"] >= 1
+
+    # wave-level accounting surfaced through the batcher
+    poison_waves = [w for w in b.waves if w.quarantined]
+    assert len(poison_waves) == 1
+    assert poison_waves[0].quarantined == [poison]
+    assert poison_waves[0].failed == 1
+    stuck_waves = [w for w in b.waves if w.timeouts]
+    assert len(stuck_waves) == 1 and stuck_waves[0].failed == 0
+
+
+def test_bisection_bound_on_real_wave(served):
+    """Poison alone in a full clean wave: isolated in exactly the fault
+    path down the bisection tree — ceil(log2 B)+1 faulted traversals."""
+    runner, poison, ref = served["runner"], served["poison"], served["ref"]
+    clean = np.asarray([r for r in sorted(ref) if r != poison], np.int64)
+    wave_roots = np.resize(clean, B)
+    wave_roots[B // 2] = poison
+    sup = EngineSupervisor(FaultyEngine(runner, poisoned_roots=[poison]),
+                           watchdog=False, backoff=0.0)
+    wave = sup.run_wave(wave_roots)
+    bound = math.ceil(math.log2(B)) + 1
+    assert wave.fault_waves == bound        # poison rides one root-to-leaf path
+    assert wave.quarantined == [poison]
+    assert wave.n_ok == B - 1
+    for o in wave.outcomes:
+        if o.root != poison:
+            np.testing.assert_array_equal(
+                np.asarray(o.levels, np.int64), ref[o.root])
+
+
+def test_forced_pallas_failure_demotes_to_jnp_matching_oracle(served):
+    """break_pallas: the ladder steps use_pallas off mid-wave and the jnp
+    fallback's rows equal the fault-free reference."""
+    runner, poison, ref = served["runner"], served["poison"], served["ref"]
+    clean = np.asarray([r for r in sorted(ref) if r != poison],
+                       np.int64)[:B]
+    prev = runner.use_pallas
+    runner.use_pallas = True
+    try:
+        sup = EngineSupervisor(FaultyEngine(runner, break_pallas=True),
+                               max_retries=3, backoff=0.0, watchdog=False)
+        wave = sup.run_wave(clean)
+    finally:
+        runner.use_pallas = prev
+    assert wave.demotions == ["pallas->jnp"]
+    assert wave.n_failed == 0
+    for o in wave.outcomes:
+        np.testing.assert_array_equal(np.asarray(o.levels, np.int64),
+                                      ref[o.root])
+
+
+def test_watchdog_deadline_tracks_timer_on_real_waves(served):
+    """With no explicit deadline, the watchdog calibrates from the
+    StepTimer's running median of real wave durations."""
+    runner = served["runner"]
+    roots = np.resize(np.asarray(sorted(served["ref"])[:5], np.int64), B)
+    sup = EngineSupervisor(runner, watchdog=True)
+    assert sup.current_deadline() is None       # cold: compile-safe
+    for _ in range(3):
+        assert sup.run_wave(roots).n_ok == B
+    dl = sup.current_deadline()
+    med = sup.timer.median()
+    assert dl is not None and med is not None
+    assert dl >= sup.timer.k * med or dl == pytest.approx(sup.min_deadline)

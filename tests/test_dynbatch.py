@@ -273,3 +273,138 @@ def test_distributed_engine_behind_batcher():
         np.testing.assert_array_equal(np.asarray(f.result(), np.int64),
                                       bfs_oracle(csr, r))
     b.close()
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: typed futures, drain under failure, supervised waves
+# ---------------------------------------------------------------------------
+
+class AlwaysDown:
+    """Transiently-failing engine (every wave raises RuntimeError)."""
+
+    last_stats = {}
+
+    def run_batch(self, roots):
+        raise RuntimeError("engine down")
+
+
+def test_future_done_and_exception_accessors(graph, engine):
+    csr, _ = graph
+    b = DynamicBatcher(engine, window=1.0, clock=FakeClock())
+    f = b.submit(5, block=False)
+    assert not f.done()
+    assert f.exception() is None            # pending: poll returns None
+    assert f.exception(timeout=0.01) is None
+    b.flush()
+    assert f.done() and f.exception() is None       # success: still None
+    np.testing.assert_array_equal(np.asarray(f.result(), np.int64),
+                                  bfs_oracle(csr, 5))
+    b.close()
+
+
+def test_failed_future_raises_typed_error_immediately():
+    """A resolved-with-error future must raise at once, not ride out the
+    caller's timeout (the old bug: error-resolution didn't set the event,
+    so result(timeout=30) blocked the full 30s)."""
+    import time as _time
+
+    b = DynamicBatcher(AlwaysDown(), window=1.0, clock=FakeClock())
+    f = b.submit(3, block=False)
+    b.flush()
+    assert f.done()
+    assert isinstance(f.exception(), RuntimeError)
+    t0 = _time.perf_counter()
+    with pytest.raises(RuntimeError):
+        f.result(timeout=30.0)
+    assert _time.perf_counter() - t0 < 5.0
+    b.close()
+
+
+def test_drain_resolves_every_future_with_failing_engine_legacy():
+    """close(drain=True) with a permanently failing engine must terminate
+    and resolve EVERY future with a typed error (no unbounded retry)."""
+    b = DynamicBatcher(AlwaysDown(), window=1.0, clock=FakeClock())
+    futures = [b.submit(r, block=False) for r in range(5)]
+    b.close(drain=True)
+    for f in futures:
+        assert f.done()
+        assert isinstance(f.exception(), RuntimeError)
+    s = b.stats()
+    assert s["errors"] >= 1 and s["requests"] == 0
+
+
+def test_drain_resolves_every_future_with_failing_engine_supervised():
+    from repro.ft import EngineSupervisor, WaveAbandoned
+
+    sup = EngineSupervisor(AlwaysDown(), max_retries=1, backoff=0.0,
+                           watchdog=False)
+    b = DynamicBatcher(sup, window=1.0, clock=FakeClock())
+    futures = [b.submit(r, block=False) for r in range(4)]
+    b.close(drain=True)
+    for f in futures:
+        assert f.done()
+        assert isinstance(f.exception(), WaveAbandoned)
+    s = b.stats()
+    assert s["requests_failed"] == 4
+    assert s["fault_tolerance"]["retries"] == 1
+
+
+def test_legacy_deterministic_fault_retries_singletons_once(graph, engine):
+    """Unsupervised dispatch splits a deterministically-failing wave into
+    singleton retries EXACTLY once — a singleton that still fails resolves
+    with its error instead of re-enqueueing forever."""
+    csr, _ = graph
+
+    class BadRootEngine:
+        last_stats = {}
+
+        def __init__(self, inner):
+            self._inner = inner
+
+        def run_batch(self, roots):
+            if 999 in np.asarray(roots).tolist():
+                raise ValueError("root out of range")
+            return self._inner.run(np.asarray(roots)).levels
+
+    b = DynamicBatcher(BadRootEngine(engine), window=1.0, clock=FakeClock())
+    good = b.submit(3, block=False)
+    bad = b.submit(999, block=False)
+    b.close(drain=True)                     # wave + singleton retries
+    assert good.done() and bad.done()
+    with pytest.raises(ValueError):
+        bad.result(timeout=0)
+    np.testing.assert_array_equal(np.asarray(good.result(), np.int64),
+                                  bfs_oracle(csr, 3))
+
+
+def test_supervised_wave_quarantines_poison_and_serves_rest(graph, engine):
+    """EngineSupervisor behind the batcher: per-request outcomes — the
+    poisoned root fails typed, co-batched requests get correct levels."""
+    from repro.ft import (EngineSupervisor, FaultyEngine, PoisonedRoot,
+                          RequestQuarantined)
+
+    csr, _ = graph
+    sup = EngineSupervisor(FaultyEngine(engine, poisoned_roots=[42]),
+                           backoff=0.0, watchdog=False)
+    b = DynamicBatcher(sup, out_deg=np.asarray(engine.out_deg),
+                       window=1.0, clock=FakeClock())
+    roots = [0, 3, 42, 17, 99]
+    futures = [b.submit(r, block=False) for r in roots]
+    waves = b.flush()
+    assert len(waves) == 1
+    ws = waves[0]
+    assert ws.failed == 1 and ws.quarantined == [42]
+    assert ws.traversals > 1                # bisection sub-waves counted
+    for f, r in zip(futures, roots):
+        if r == 42:
+            exc = f.exception()
+            assert isinstance(exc, RequestQuarantined)
+            assert isinstance(exc.__cause__, PoisonedRoot)
+        else:
+            np.testing.assert_array_equal(np.asarray(f.result(), np.int64),
+                                          bfs_oracle(csr, r))
+    s = b.stats()
+    assert s["requests"] == 4 and s["requests_failed"] == 1
+    assert s["fault_tolerance"]["quarantined"] == [42]
+    assert s["traversed_edges"] > 0         # TEPS over the served four
+    b.close()

@@ -1,0 +1,580 @@
+"""Fault-tolerance machinery (``repro.ft``): taxonomy, injection,
+step timing, retry-from-checkpoint, and the EngineSupervisor policy.
+
+The supervisor is unit-tested against scripted fake engines with backoff
+and clocks injected, so every policy branch — transient retry, wave
+abandonment, quarantine bisection, budget escalation, the degradation
+ladder, and the watchdog — runs deterministically.  The end-to-end chaos
+acceptance on a real graph lives in ``tests/test_chaos.py``.
+"""
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BudgetOverflowError
+from repro.ft import (DETERMINISTIC, TRANSIENT, EngineSupervisor,
+                      FailureInjector, FaultPlan, FaultyEngine,
+                      InjectedFailure, KernelFault, PoisonedRoot,
+                      RequestQuarantined, StepTimer, WaveAbandoned,
+                      WaveTimeout, classify_fault, find_tunable_engine,
+                      is_kernel_fault, run_with_retries,
+                      supports_budget_override)
+
+N = 16          # |V| of the fake engines' imaginary graph
+
+
+class ScriptedEngine:
+    """Serves ``levels[i][:] = root`` after raising scripted failures.
+
+    ``script`` is a list consumed one entry per ``run_batch`` call:
+    an exception instance to raise, or None to serve.  An exhausted
+    script serves.  Records every call's (roots, budget).
+    """
+
+    def __init__(self, script=(), stats=None):
+        self.script = list(script)
+        self.calls = []
+        self.last_stats = dict(stats or {})
+
+    def run_batch(self, roots, *, budget=None):
+        roots = np.asarray(roots)
+        self.calls.append((roots.tolist(), budget))
+        if self.script:
+            exc = self.script.pop(0)
+            if exc is not None:
+                raise exc
+        return np.repeat(roots[:, None], N, axis=1)
+
+
+def expected_rows(roots):
+    return np.repeat(np.asarray(roots)[:, None], N, axis=1)
+
+
+def make_supervisor(engine, **kw):
+    kw.setdefault("backoff", 0.0)
+    kw.setdefault("watchdog", False)
+    kw.setdefault("pad_to_plane", False)
+    return EngineSupervisor(engine, **kw)
+
+
+# ---------------------------------------------------------------------------
+# taxonomy + helpers
+# ---------------------------------------------------------------------------
+
+def test_classify_fault():
+    for exc in (ValueError("x"), TypeError("x"), IndexError("x"),
+                KeyError("x"), NotImplementedError("x"),
+                PoisonedRoot("x")):
+        assert classify_fault(exc) == DETERMINISTIC
+    for exc in (RuntimeError("x"), InjectedFailure("x"), KernelFault("x"),
+                WaveTimeout("x"), OSError("x"), MemoryError("x"),
+                BudgetOverflowError(8, 99, 3)):
+        assert classify_fault(exc) == TRANSIENT
+
+
+def test_is_kernel_fault():
+    assert is_kernel_fault(KernelFault("boom"))
+    assert is_kernel_fault(RuntimeError("pallas lowering failed"))
+    assert is_kernel_fault(RuntimeError("XLA compilation error"))
+    assert not is_kernel_fault(RuntimeError("disk on fire"))
+    # deterministic classes never drive the ladder, whatever they say
+    assert not is_kernel_fault(ValueError("pallas pallas pallas"))
+
+
+def test_supports_budget_override():
+    assert supports_budget_override(ScriptedEngine())
+
+    class NoBudget:
+        def run_batch(self, roots):
+            return roots
+
+    class Kwargs:
+        def run_batch(self, roots, **kw):
+            return roots
+
+    assert not supports_budget_override(NoBudget())
+    assert supports_budget_override(Kwargs())
+
+
+def test_find_tunable_engine_walks_wrappers():
+    class Tunable:
+        def __init__(self):
+            self.use_pallas = True
+            self.packed = True
+
+    class Wrap:
+        def __init__(self, inner):
+            self.inner = inner
+
+    t = Tunable()
+    assert find_tunable_engine(t) is t
+    assert find_tunable_engine(Wrap(Wrap(t))) is t
+    assert find_tunable_engine(Wrap(object())) is None
+
+
+# ---------------------------------------------------------------------------
+# failures.py primitives
+# ---------------------------------------------------------------------------
+
+def test_failure_injector_fires_exactly_once():
+    inj = FailureInjector(fail_at=(3, 7))
+    inj.check(0)
+    with pytest.raises(InjectedFailure):
+        inj.check(3)
+    inj.check(3)            # second pass over the same step: clean
+    with pytest.raises(InjectedFailure):
+        inj.check(7)
+    inj.check(7)
+
+
+def test_step_timer_median_and_stragglers():
+    t = StepTimer(k=3.0, window=50)
+    assert t.median() is None
+    for i, d in enumerate([0.1, 0.1, 0.1, 0.1]):
+        assert not t.record(i, d)       # < 5 samples: never flagged
+    assert t.median() == pytest.approx(0.1)
+    assert t.record(4, 1.0)             # 1.0 > 3 x 0.1 with 5 samples
+    assert t.flags == [4]
+    assert not t.record(5, 0.25)        # above median but under k x
+
+
+def test_run_with_retries_replays_from_checkpoint(tmp_path):
+    """The retry loop against the real checkpoint module: every failure
+    restores the latest checkpoint and replays to an exact final state."""
+    from repro.ckpt import checkpoint as ckpt
+
+    ckpt_dir = str(tmp_path / "ckpt")
+    state = {"x": np.zeros(4, np.int64)}
+    executed = []
+
+    def step_fn(step):
+        state["x"] = state["x"] + step
+        ckpt.save(ckpt_dir, step, {"x": state["x"]})
+        executed.append(step)
+
+    def restore_fn():
+        s = ckpt.latest_step(ckpt_dir)
+        if s is None:
+            state["x"] = np.zeros(4, np.int64)
+            return 0
+        tree, manifest = ckpt.restore(ckpt_dir, s, {"x": state["x"]})
+        assert manifest["step"] == s
+        state["x"] = np.asarray(tree["x"])
+        return s + 1
+
+    timer = StepTimer()
+    inj = FailureInjector(fail_at=(0, 3, 5))
+    done, restarts = run_with_retries(step_fn, restore_fn, num_steps=8,
+                                      injector=inj, timer=timer)
+    assert done == 8 and restarts == 3
+    # replay is exact: state equals the fault-free accumulation
+    np.testing.assert_array_equal(state["x"],
+                                  np.full(4, sum(range(8)), np.int64))
+    assert len(timer.durations) == len(executed) == 8
+
+    def perma_broken(step):
+        raise RuntimeError("permanent")
+
+    with pytest.raises(RuntimeError):       # exhausted retry budget raises
+        run_with_retries(perma_broken, lambda: 0, num_steps=1,
+                         max_retries=2)
+
+
+# ---------------------------------------------------------------------------
+# supervisor: retry / abandon
+# ---------------------------------------------------------------------------
+
+def test_clean_wave_passes_through():
+    eng = ScriptedEngine()
+    sup = make_supervisor(eng)
+    wave = sup.run_wave([3, 5, 9])
+    assert wave.n_ok == 3 and wave.n_failed == 0
+    assert wave.traversals == 1 and wave.retries == 0
+    np.testing.assert_array_equal(wave.levels(), expected_rows([3, 5, 9]))
+    np.testing.assert_array_equal(sup.run_batch([4]), expected_rows([4]))
+    assert sup.stats()["waves"] == 2
+
+
+def test_transient_fault_retries_and_succeeds():
+    eng = ScriptedEngine(script=[InjectedFailure("flaky"),
+                                 KernelFault("flaky")])
+    slept = []
+    sup = make_supervisor(eng, max_retries=2, backoff=0.01,
+                          sleep=slept.append)
+    wave = sup.run_wave([1, 2])
+    assert wave.n_ok == 2
+    assert wave.traversals == 3 and wave.retries == 2
+    assert wave.fault_waves == 2
+    assert slept == [0.01, 0.02]        # exponential backoff, injected sleep
+    assert len(eng.calls) == 3
+
+
+def test_transient_exhaustion_abandons_with_typed_error():
+    eng = ScriptedEngine(script=[RuntimeError("down")] * 10)
+    sup = make_supervisor(eng, max_retries=2)
+    wave = sup.run_wave([1, 2, 3])
+    assert wave.n_failed == 3 and wave.traversals == 3
+    for o in wave.outcomes:
+        assert isinstance(o.error, WaveAbandoned)
+        assert isinstance(o.error.__cause__, RuntimeError)
+    with pytest.raises(WaveAbandoned):
+        wave.levels()
+    # run_batch surfaces the same typed error
+    eng2 = ScriptedEngine(script=[RuntimeError("down")] * 10)
+    with pytest.raises(WaveAbandoned):
+        make_supervisor(eng2, max_retries=1).run_batch([1])
+
+
+def test_zero_retries_means_single_attempt():
+    eng = ScriptedEngine(script=[RuntimeError("down")])
+    sup = make_supervisor(eng, max_retries=0)
+    wave = sup.run_wave([1])
+    assert wave.traversals == 1 and wave.n_failed == 1
+
+
+# ---------------------------------------------------------------------------
+# supervisor: quarantine bisection
+# ---------------------------------------------------------------------------
+
+class PoisonEngine(ScriptedEngine):
+    def __init__(self, poison):
+        super().__init__()
+        self.poison = int(poison)
+
+    def run_batch(self, roots, *, budget=None):
+        if self.poison in np.asarray(roots).tolist():
+            self.calls.append((np.asarray(roots).tolist(), budget))
+            raise PoisonedRoot(f"root {self.poison}")
+        return super().run_batch(roots, budget=budget)
+
+
+@pytest.mark.parametrize("batch", [2, 8, 32])
+def test_bisection_isolates_poison_within_log_bound(batch):
+    roots = list(range(batch))
+    poison = batch // 2
+    eng = PoisonEngine(poison)
+    sup = make_supervisor(eng)
+    wave = sup.run_wave(roots)
+    assert wave.quarantined == [poison]
+    assert wave.n_failed == 1 and wave.n_ok == batch - 1
+    err = wave.outcomes[poison].error
+    assert isinstance(err, RequestQuarantined)
+    assert isinstance(err.__cause__, PoisonedRoot)
+    for o in wave.outcomes:
+        if o.root != poison:
+            np.testing.assert_array_equal(o.levels, expected_rows([o.root])[0])
+    # the whole point: O(log B) faulted traversals, not O(B)
+    assert wave.fault_waves <= math.ceil(math.log2(batch)) + 1
+    assert wave.bisections >= 1
+    assert sup.stats()["quarantined"] == [poison]
+
+
+def test_bisection_isolates_multiple_poisons():
+    class MultiPoison(ScriptedEngine):
+        def run_batch(self, roots, *, budget=None):
+            bad = sorted(set(np.asarray(roots).tolist()) & {2, 5})
+            if bad:
+                raise PoisonedRoot(f"roots {bad}")
+            return super().run_batch(roots, budget=budget)
+
+    sup = make_supervisor(MultiPoison())
+    wave = sup.run_wave(list(range(8)))
+    assert sorted(wave.quarantined) == [2, 5]
+    assert wave.n_ok == 6
+
+
+def test_singleton_deterministic_failure_quarantines_without_bisection():
+    eng = ScriptedEngine(script=[ValueError("bad root")])
+    sup = make_supervisor(eng)
+    wave = sup.run_wave([7])
+    assert wave.quarantined == [7] and wave.bisections == 0
+    assert isinstance(wave.outcomes[0].error, RequestQuarantined)
+
+
+# ---------------------------------------------------------------------------
+# supervisor: budget escalation
+# ---------------------------------------------------------------------------
+
+class OverflowEngine(ScriptedEngine):
+    """Overflows until called with budget >= need, then serves and
+    reports the settled budget in last_stats (like the real runner)."""
+
+    def __init__(self, need=64):
+        super().__init__()
+        self.need = int(need)
+
+    def run_batch(self, roots, *, budget=None):
+        got = int(budget or 8)
+        if got < self.need:
+            self.calls.append((np.asarray(roots).tolist(), budget))
+            raise BudgetOverflowError(got, self.need, 2)
+        self.last_stats = {"overflow_retries": 1, "budget": got}
+        return super().run_batch(roots, budget=budget)
+
+
+def test_budget_overflow_escalates_via_per_wave_override():
+    eng = OverflowEngine(need=64)
+    sup = make_supervisor(eng, max_retries=5)
+    wave = sup.run_wave([1, 2])
+    assert wave.n_ok == 2
+    # 8 -> 16 -> 32 -> 64: three escalated retries after the bare attempt
+    assert [b for _, b in eng.calls] == [None, 16, 32, 64]
+    assert wave.budget_escalations == 3
+    # the settled budget becomes the hint the next wave starts from
+    assert sup.stats()["budget_hint"] == 64
+    eng.calls.clear()
+    sup.run_wave([3])
+    assert [b for _, b in eng.calls] == [64]
+
+
+def test_budget_escalation_disabled():
+    eng = OverflowEngine(need=64)
+    sup = make_supervisor(eng, max_retries=2, escalate_budget=False)
+    wave = sup.run_wave([1])
+    assert wave.n_failed == 1 and wave.budget_escalations == 0
+    assert [b for _, b in eng.calls] == [None, None, None]
+
+
+def test_budget_kwarg_not_forced_on_engines_without_support():
+    class NoBudget:
+        last_stats = {}
+
+        def run_batch(self, roots):
+            return np.repeat(np.asarray(roots)[:, None], N, axis=1)
+
+    sup = make_supervisor(NoBudget())
+    sup._budget_hint = 999          # even with a hint pending
+    wave = sup.run_wave([1, 2])
+    assert wave.n_ok == 2
+
+
+# ---------------------------------------------------------------------------
+# supervisor: degradation ladder
+# ---------------------------------------------------------------------------
+
+class LadderEngine(ScriptedEngine):
+    """Kernel-faults while ``use_pallas`` is on (a broken toolchain)."""
+
+    def __init__(self):
+        super().__init__()
+        self.use_pallas = True
+        self.packed = True
+
+    def run_batch(self, roots, *, budget=None):
+        if self.use_pallas:
+            self.calls.append((np.asarray(roots).tolist(), budget))
+            raise KernelFault("pallas lowering failed")
+        return super().run_batch(roots, budget=budget)
+
+
+def test_ladder_demotes_pallas_to_jnp_and_restores():
+    eng = LadderEngine()
+    sup = make_supervisor(eng, max_retries=3)
+    wave = sup.run_wave([1, 2])
+    assert wave.n_ok == 2
+    assert wave.demotions == ["pallas->jnp"]
+    # two kernel faults before the demotion kicked in, then success
+    assert wave.fault_waves == 2 and wave.traversals == 3
+    # knobs restored per-wave by default
+    assert eng.use_pallas is True and eng.packed is True
+
+
+def test_ladder_sticky_demotions_persist():
+    eng = LadderEngine()
+    sup = make_supervisor(eng, max_retries=3, sticky_demotions=True)
+    sup.run_wave([1])
+    assert eng.use_pallas is False
+    wave2 = sup.run_wave([2])       # already demoted: clean first attempt
+    assert wave2.traversals == 1 and wave2.demotions == []
+    assert sup.stats()["demotions"] == ["pallas->jnp"]
+
+
+def test_ladder_second_rung_unpacks():
+    class AlwaysKernelFault(ScriptedEngine):
+        def __init__(self):
+            super().__init__()
+            self.use_pallas = True
+            self.packed = True
+            self.served = False
+
+        def run_batch(self, roots, *, budget=None):
+            if self.use_pallas or self.packed:
+                raise KernelFault("kernel fault")
+            return super().run_batch(roots, budget=budget)
+
+    eng = AlwaysKernelFault()
+    sup = make_supervisor(eng, max_retries=5)
+    wave = sup.run_wave([4])
+    assert wave.n_ok == 1
+    assert wave.demotions == ["pallas->jnp", "packed->boolplane"]
+
+
+def test_ladder_disabled_never_touches_knobs():
+    eng = LadderEngine()
+    sup = make_supervisor(eng, max_retries=2, degrade=False)
+    wave = sup.run_wave([1])
+    assert wave.n_failed == 1 and wave.demotions == []
+    assert eng.use_pallas is True
+
+
+def test_demotion_grants_watchdog_slack():
+    eng = LadderEngine()
+    sup = make_supervisor(eng, max_retries=3, watchdog=True,
+                          wave_deadline=1.0, demotion_slack=4.0,
+                          sticky_demotions=True)
+    assert sup.current_deadline() == pytest.approx(1.0)
+    sup.run_wave([1])
+    # the demoted rung is slower by construction; the deadline follows
+    assert sup.current_deadline() == pytest.approx(4.0)
+    # non-sticky supervisors reset the slack with the knobs
+    eng2 = LadderEngine()
+    sup2 = make_supervisor(eng2, max_retries=3, watchdog=True,
+                           wave_deadline=1.0)
+    sup2.run_wave([1])
+    assert sup2.current_deadline() == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# supervisor: watchdog
+# ---------------------------------------------------------------------------
+
+class StallEngine(ScriptedEngine):
+    """Stalls (real wall clock) once, then serves instantly."""
+
+    def __init__(self, stall=0.4):
+        super().__init__()
+        self.stall = stall
+        self.stalled = False
+
+    def run_batch(self, roots, *, budget=None):
+        if not self.stalled:
+            self.stalled = True
+            time.sleep(self.stall)
+        return super().run_batch(roots, budget=budget)
+
+
+def test_watchdog_abandons_stuck_wave_and_retry_succeeds():
+    eng = StallEngine(stall=0.5)
+    sup = EngineSupervisor(eng, max_retries=2, backoff=0.0,
+                           wave_deadline=0.1, pad_to_plane=False)
+    t0 = time.perf_counter()
+    wave = sup.run_wave([1, 2])
+    assert wave.n_ok == 2
+    assert wave.timeouts == 1 and wave.retries == 1
+    # the stuck attempt was abandoned at ~deadline, not ridden out;
+    # total time is dominated by joining the zombie, well under 2x stall
+    assert time.perf_counter() - t0 < 2.0
+    assert sup.stats()["timeouts"] == 1
+
+
+def test_watchdog_timeout_is_typed_and_exhaustible():
+    class AlwaysStuck(ScriptedEngine):
+        def run_batch(self, roots, *, budget=None):
+            time.sleep(0.3)
+            return super().run_batch(roots, budget=budget)
+
+    sup = EngineSupervisor(AlwaysStuck(), max_retries=1, backoff=0.0,
+                           wave_deadline=0.05, pad_to_plane=False)
+    wave = sup.run_wave([5])
+    assert wave.n_failed == 1 and wave.timeouts == 2
+    err = wave.outcomes[0].error
+    assert isinstance(err, WaveAbandoned)
+    assert isinstance(err.__cause__, WaveTimeout)
+
+
+def test_cold_engine_is_never_deadlined():
+    sup = EngineSupervisor(ScriptedEngine(), watchdog=True)
+    assert sup.current_deadline() is None       # no history yet
+    for _ in range(3):
+        sup.run_wave([1])
+    dl = sup.current_deadline()                 # k x median, clamped up
+    assert dl is not None and dl >= sup.min_deadline
+
+
+def test_explicit_deadline_beats_derived():
+    sup = EngineSupervisor(ScriptedEngine(), wave_deadline=7.5)
+    assert sup.current_deadline() == pytest.approx(7.5)
+    assert EngineSupervisor(ScriptedEngine(),
+                            watchdog=False).current_deadline() is None
+
+
+# ---------------------------------------------------------------------------
+# chaos harness doubles
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_exact_once_and_validation():
+    plan = FaultPlan([(0, "kernel"), (2, "stuck")])
+    assert len(plan) == 2
+    assert plan.pop(1) is None
+    assert plan.pop(0) == "kernel" and plan.pop(0) is None
+    assert plan.pop(2) == "stuck"
+    assert plan.injected == [(0, "kernel"), (2, "stuck")]
+    assert len(plan) == 0
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan([(0, "gremlins")])
+    with pytest.raises(ValueError, match="duplicate"):
+        FaultPlan([(0, "kernel"), (0, "runtime")])
+
+
+def test_fault_plan_random_is_deterministic():
+    a = FaultPlan.random(100, 0.2, seed=7)
+    b = FaultPlan.random(100, 0.2, seed=7)
+    assert a.pending() == b.pending()
+    assert 0 < len(a) < 100
+    assert FaultPlan.random(100, 0.2, seed=8).pending() != a.pending()
+    assert len(FaultPlan.random(100, 0.0, seed=7)) == 0
+
+
+def test_faulty_engine_injects_per_plan():
+    inner = ScriptedEngine()
+    naps = []
+    eng = FaultyEngine(inner, FaultPlan([(0, "kernel"), (1, "runtime"),
+                                         (2, "stuck")]),
+                       stall_seconds=9.0, sleep=naps.append)
+    with pytest.raises(KernelFault):
+        eng.run_batch([1])
+    with pytest.raises(InjectedFailure):
+        eng.run_batch([1])
+    rows = eng.run_batch([1])               # stuck: stalls, then serves
+    assert naps == [9.0]
+    np.testing.assert_array_equal(rows, expected_rows([1]))
+    assert eng.calls == 3 and len(inner.calls) == 1
+
+
+def test_faulty_engine_poison_and_break_pallas():
+    inner = LadderEngine()
+    inner.use_pallas = False                # healthy rung
+    eng = FaultyEngine(inner, poisoned_roots=[3])
+    with pytest.raises(PoisonedRoot):
+        eng.run_batch([1, 3])
+    np.testing.assert_array_equal(eng.run_batch([1, 2]),
+                                  expected_rows([1, 2]))
+    inner.use_pallas = True
+    broken = FaultyEngine(inner, break_pallas=True)
+    with pytest.raises(KernelFault):
+        broken.run_batch([1])
+    inner.use_pallas = False
+    np.testing.assert_array_equal(broken.run_batch([1]),
+                                  expected_rows([1]))
+
+
+def test_supervisor_over_faulty_engine_end_to_end():
+    """The full stack on fakes: plan faults + poison, one run_wave."""
+    inner = ScriptedEngine()
+    # idx 0 raises PoisonedRoot (poison check preempts the plan), so pin
+    # the kernel fault to idx 1 — the first clean bisection sub-wave
+    eng = FaultyEngine(inner, FaultPlan([(1, "kernel")]),
+                       poisoned_roots=[6])
+    sup = make_supervisor(eng, max_retries=2)
+    wave = sup.run_wave(list(range(8)))
+    assert wave.quarantined == [6]
+    assert wave.n_ok == 7 and wave.n_failed == 1
+    assert eng.plan.injected == [(1, "kernel")]
+    assert wave.retries >= 1                # the kernel fault was retried
+    assert wave.fault_waves >= 2            # kernel fault + bisection path
+    for o in wave.outcomes:
+        if o.root != 6:
+            np.testing.assert_array_equal(o.levels,
+                                          expected_rows([o.root])[0])
