@@ -23,6 +23,15 @@ The same harness benches the other vertex programs riding the engine
   PYTHONPATH=src python -m benchmarks.msbfs_throughput
   PYTHONPATH=src python -m benchmarks.msbfs_throughput \
       --out BENCH_msbfs.json --check   # CI: fail if packed is slower
+
+The ``--use-pallas`` flag routes the packed arm through the fused Pallas
+propagate kernel; at rmat20 scale the plane-array footprint exceeds the
+VMEM budget, so ``kernels.ops.propagate_plan`` auto-selects the
+row-tiled variant (edge stream pre-bucketed by target tile):
+
+  PYTHONPATH=src python -m benchmarks.msbfs_throughput \
+      --graph rmat20-16 --use-pallas --batches 32 --repeats 1 \
+      --out BENCH_msbfs_rmat20.json --check
 """
 from __future__ import annotations
 
@@ -41,7 +50,8 @@ from repro.graph import get_dataset, symmetrize_csr
 
 def run(graph: str = "rmat16-16", batch_sizes=(1, 2, 4, 8, 16, 32),
         policy: str = "beamer", seed: int = 0, repeats: int = 3,
-        packed_modes=(True, False), algo: str = "bfs") -> dict:
+        packed_modes=(True, False), algo: str = "bfs",
+        use_pallas: bool = False, tile_rows: int | None = None) -> dict:
     program = get_program(algo)
     ds = get_dataset(graph)
     csr, csc = ds.csr, ds.csc
@@ -57,12 +67,15 @@ def run(graph: str = "rmat16-16", batch_sizes=(1, 2, 4, 8, 16, 32),
     rows = []
     for packed in packed_modes:
         sched = SchedulerConfig(policy=policy)
+        # Pallas propagate (auto whole-VMEM vs row-tiled) applies to the
+        # packed engine only; the bool-plane baseline stays pure jnp.
+        kw = dict(use_pallas=use_pallas and packed, tile_rows=tile_rows)
         if algo == "bfs":
-            runner = MultiSourceBFSRunner(g, sched, packed=packed)
+            runner = MultiSourceBFSRunner(g, sched, packed=packed, **kw)
         else:
             assert packed, "bool-plane baseline exists for BFS only"
             cls = {"cc": ConnectedComponentsRunner, "sssp": SSSPRunner}[algo]
-            runner = cls(g, sched=sched)
+            runner = cls(g, sched=sched, **kw)
         for b in batch_sizes:
             roots = roots_all[:b]
             runner.run(roots)                   # warm-up / compile
@@ -89,7 +102,9 @@ def run(graph: str = "rmat16-16", batch_sizes=(1, 2, 4, 8, 16, 32),
     for r in rows:
         r["speedup_vs_b1"] = round(
             r["aggregate_teps"] / max(base_by_arm[r["packed"]], 1e-9), 2)
-    out = {"graph": graph, "policy": policy, "algo": algo, "rows": rows,
+    out = {"graph": graph, "policy": policy, "algo": algo,
+           "use_pallas": bool(use_pallas), "tile_rows": tile_rows,
+           "rows": rows,
            "monotonic": all(packed_rows[i]["aggregate_teps"]
                             <= packed_rows[i + 1]["aggregate_teps"]
                             for i in range(len(packed_rows) - 1))}
@@ -116,6 +131,8 @@ def bench_record(out: dict) -> dict:
         "graph": out["graph"],
         "policy": out["policy"],
         "algo": out.get("algo", "bfs"),
+        "use_pallas": out.get("use_pallas", False),
+        "tile_rows": out.get("tile_rows"),
         "rows": [dict(graph=out["graph"], batch=r["batch"],
                       packed=bool(r["packed"]),
                       aggregate_teps=r["aggregate_teps"])
@@ -136,6 +153,15 @@ def main():
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--packed-only", action="store_true",
                     help="skip the legacy bool-plane baseline arm")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="run the packed arm through the Pallas propagate "
+                         "kernel (auto-selects whole-VMEM vs row-tiled by "
+                         "plane-array footprint; see kernels.ops."
+                         "propagate_plan)")
+    ap.add_argument("--tile-rows", type=int, default=None,
+                    help="with --use-pallas: 0 forces the whole-VMEM "
+                         "kernel, >0 forces row tiles of that many "
+                         "vertices (default: auto)")
     ap.add_argument("--out", metavar="PATH",
                     help="also write the stable benchmark record "
                          "(e.g. BENCH_msbfs.json at the repo root)")
@@ -154,7 +180,8 @@ def main():
         modes = (True,) if args.packed_only else (True, False)
     out = run(graph=args.graph, batch_sizes=tuple(args.batches),
               policy=args.policy, repeats=args.repeats, packed_modes=modes,
-              algo=args.algo)
+              algo=args.algo, use_pallas=args.use_pallas,
+              tile_rows=args.tile_rows)
     name = ("msbfs_throughput" if args.algo == "bfs"
             else f"msbfs_throughput_{args.algo}")
     save(name, out)

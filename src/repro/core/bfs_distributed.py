@@ -49,6 +49,14 @@ class DistConfig:
     edge_budget: int = 1 << 15    # per-shard expansion budget (auto-grows)
     queue_capacity: int = 1 << 12  # per-destination FIFO depth (queue mode)
     scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
+    # Batched pull through the row-tiled fused propagate kernel
+    # (kernels.ops.msbfs_propagate_msgs) instead of the jnp scatter-OR.
+    # Pull only: the push candidates must cross the OR-reduce-scatter
+    # crossbar BEFORE the visited filter, so its P3 cannot fuse into the
+    # local scatter.  tile_rows=None tiles at the PE vertex interval
+    # (verts_per_shard) — the partition the kernel's tiles mirror.
+    use_pallas: bool = False
+    tile_rows: int | None = None
 
 
 class DistributedBFS:
@@ -397,6 +405,7 @@ class DistributedBFS:
     def _pull_batch_fn(self, budget: int, nb: int,
                        program: VertexProgram = BFS):
         axes, vl, nwb = self.axes, self.vl, bitmap.num_words(nb)
+        cfg, k = self.cfg, self.k
 
         def pull_b(frontier, seen, level, lvl, in_indptr, in_indices,
                    out_deg, in_deg):
@@ -412,15 +421,32 @@ class DistributedBFS:
                 unvisited, in_indptr, in_indices)
             overflow = jax.lax.psum(
                 jnp.any(total > budget).astype(jnp.int32), axes)
-            # packed P2->P3: parents' plane words scatter-OR into each
-            # PE's local candidate words (per-shard vmap, no bool planes)
+            # packed P2->P3: parents' plane words combine into each PE's
+            # local candidate words — the gather reads the all-gathered
+            # GLOBAL frontier while the scatter stays shard-local, which
+            # is exactly the msgs-form fused kernel's contract
             msg = f_global[jnp.maximum(parent, 0)]         # [k, budget, nwb]
-            cand_w = jax.vmap(
-                lambda t, m: bitmap._scatter_or_rows(
-                    jnp.zeros((vl, nwb), jnp.uint32), t, m))(
-                jnp.where(valid, child, vl), msg)
-            new = cand_w & ~seen
-            s2 = seen | new
+            if cfg.use_pallas:
+                # row-tiled fused propagate over the k PE rows stacked
+                # flat: with tile_rows = vl each kernel tile IS one PE's
+                # vertex interval (the paper's PC-feeds-its-own-partition
+                # rule), and P3 + the discovery popcount fuse in-kernel
+                from repro.kernels import ops as kops
+                offs = (jnp.arange(k, dtype=jnp.int32) * vl)[:, None]
+                new_f, s2_f, _ = kops.msbfs_propagate_msgs(
+                    seen.reshape(k * vl, nwb), msg.reshape(-1, nwb),
+                    jnp.where(valid, child + offs, -1).reshape(-1),
+                    valid.reshape(-1), tile_rows=cfg.tile_rows or vl,
+                    op=program.combine)
+                new = new_f.reshape(k, vl, nwb)
+                s2 = s2_f.reshape(k, vl, nwb)
+            else:
+                cand_w = jax.vmap(
+                    lambda t, m: bitmap._scatter_or_rows(
+                        jnp.zeros((vl, nwb), jnp.uint32), t, m))(
+                    jnp.where(valid, child, vl), msg)
+                new = cand_w & ~seen
+                s2 = seen | new
             new_mask = bitmap.unpack_rows(new, nb)         # program apply
             lev2 = program.commit(level, new_mask, lvl)
             statvec = self._ms_statvec_b(
@@ -429,10 +455,13 @@ class DistributedBFS:
             return new, s2, lev2, statvec
 
         sp = self._specs()
+        # pallas_call has no shard_map replication rule — per-shard outputs
+        # here are all explicitly sharded or psum'd, so skip the check
         return jax.jit(shard_map(
             pull_b, mesh=self.mesh,
             in_specs=(sp, sp, sp, P(), sp, sp, sp, sp),
-            out_specs=(sp, sp, sp, P())))
+            out_specs=(sp, sp, sp, P()),
+            check_vma=False if cfg.use_pallas else None))
 
     def _get(self, kind: str, budget: int, nb: int = 0,
              program: VertexProgram = BFS):

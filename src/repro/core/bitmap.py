@@ -133,13 +133,28 @@ def pad_plane_slots(roots: np.ndarray, fill: int | None = None,
     slot is an independent bit-plane and duplicate roots are legal, so the
     pad slots repeat ``fill`` (default: the first root); the packed word
     count — and therefore every jitted MS-BFS step shape — stays constant
-    across wave sizes, keeping the compilation cache hot.  Returns
-    ``(padded_roots, original_length)``; undo with :func:`slice_plane_rows`.
+    across wave sizes, keeping the compilation cache hot.
+
+    Pad-slot work must stay INERT: a duplicate plane never changes the
+    union frontier (its bits ride word lanes that are already set), so the
+    per-level edge traffic is unchanged, and callers must both slice
+    results with :func:`slice_plane_rows` AND account TEPS over the real
+    requests only (``launch.dynbatch`` recounts traversed edges from the
+    sliced rows for exactly this reason).  ``fill`` may name a different
+    (e.g. known-isolated) vertex; it must be a non-negative integer —
+    bounds against |V| are the engine's ``validate_roots`` job.  Returns
+    ``(padded_roots, original_length)``.
     """
     roots = np.asarray(roots)
     if roots.ndim != 1 or roots.size == 0:
         raise ValueError(f"roots must be 1-D and non-empty, got shape "
                          f"{roots.shape}")
+    if fill is not None:
+        if isinstance(fill, bool) or not isinstance(fill, (int, np.integer)):
+            raise TypeError(f"fill must be an integer vertex id, got "
+                            f"{type(fill).__name__} ({fill!r})")
+        if fill < 0:
+            raise ValueError(f"fill must be non-negative, got {fill}")
     b = int(roots.size)
     pad = (-b) % word_bits
     if pad == 0:

@@ -191,13 +191,17 @@ def _vp_commit(g: LocalGraph, program: VertexProgram, new_w, seen_w, value,
 
 
 def _propagate_edges(g: LocalGraph, frontier_w, seen_w, src, tgt, valid,
-                     use_pallas: bool, combine: str = "or"):
+                     use_pallas: bool, combine: str = "or",
+                     tile_rows: int | None = None):
     """Fused P2->P3 on packed words: cand[tgt] ⊕= frontier[src], then
-    new = cand & ~seen, seen |= new.  Pallas kernel or jnp fallback."""
+    new = cand & ~seen, seen |= new.  Pallas kernel or jnp fallback.
+    ``tile_rows`` selects the kernel variant (None = auto by plane-array
+    footprint, 0 = whole-VMEM, > 0 = row-tiled at that size)."""
     if use_pallas:
         from repro.kernels import ops as kops
         new, seen2, _ = kops.msbfs_propagate(frontier_w, seen_w, src, tgt,
-                                             valid, op=combine)
+                                             valid, op=combine,
+                                             tile_rows=tile_rows)
         return new, seen2
     if combine != "or":
         raise NotImplementedError(
@@ -230,10 +234,11 @@ def vp_init_state(g: LocalGraph, roots: jax.Array, program: VertexProgram):
             _vp_statvec(g, frontier, seen, 0, 0, roots.shape[0]))
 
 
-@partial(jax.jit, static_argnames=("program", "budget", "use_pallas"))
+@partial(jax.jit, static_argnames=("program", "budget", "use_pallas",
+                                   "tile_rows"))
 def vp_push_step(g: LocalGraph, frontier_w, seen_w, value, lvl,
                  program: VertexProgram, budget: int,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, tile_rows: int | None = None):
     """Batched push on packed words: expand out-lists of any-plane
     frontier vertices; each budgeted edge carries its endpoint's packed
     plane word straight into the candidate planes (fused P2->P3)."""
@@ -242,16 +247,17 @@ def vp_push_step(g: LocalGraph, frontier_w, seen_w, value, lvl,
     src, nbr, valid, total = expand_edges(active, g.out_indptr,
                                           g.out_indices, budget)
     new, seen2 = _propagate_edges(g, frontier_w, seen_w, src, nbr, valid,
-                                  use_pallas, program.combine)
+                                  use_pallas, program.combine, tile_rows)
     value2, statvec = _vp_commit(g, program, new, seen2, value, lvl, total,
                                  total > budget)
     return new, seen2, value2, statvec
 
 
-@partial(jax.jit, static_argnames=("program", "budget", "use_pallas"))
+@partial(jax.jit, static_argnames=("program", "budget", "use_pallas",
+                                   "tile_rows"))
 def vp_pull_step(g: LocalGraph, frontier_w, seen_w, value, lvl,
                  program: VertexProgram, budget: int = 0,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, tile_rows: int | None = None):
     """Batched pull on packed words.
 
     Default path: dense segmented OR-scan over the whole CSC edge stream
@@ -264,7 +270,8 @@ def vp_pull_step(g: LocalGraph, frontier_w, seen_w, value, lvl,
         child, parent, valid, total = expand_edges(
             active, g.in_indptr, g.in_indices, budget)
         new, seen2 = _propagate_edges(g, frontier_w, seen_w, parent, child,
-                                      valid, True, program.combine)
+                                      valid, True, program.combine,
+                                      tile_rows)
         overflow = total > budget
     else:
         cand = _propagate_pull_scan(g, frontier_w)
@@ -370,12 +377,17 @@ class VertexProgramRunner:
     def __init__(self, g: LocalGraph, program: VertexProgram | None = None,
                  sched: SchedulerConfig | None = None,
                  init_budget: int = 1 << 15, use_pallas: bool = False,
-                 max_overflow_retries: int | None = None):
+                 max_overflow_retries: int | None = None,
+                 tile_rows: int | None = None):
         self.g = g
         self.program = program if program is not None else type(self).program
         self.sched = sched or SchedulerConfig()
         self.init_budget = init_budget
         self.use_pallas = use_pallas
+        # Pallas propagate variant: None = auto by plane-array footprint
+        # (kernels.ops.propagate_plan), 0 = force whole-VMEM, > 0 = force
+        # row tiles of that many vertices
+        self.tile_rows = tile_rows
         # None = deepen forever (absorb overflow silently, the historical
         # behavior); an int bounds per-wave re-runs and surfaces persistent
         # overflow as BudgetOverflowError for the serving FT layer
@@ -460,7 +472,7 @@ class VertexProgramRunner:
             state0 = (frontier, seen, value)
             frontier, seen, value, statvec = step(
                 g, *state0, np.int32(lvl), program,
-                budget if budgeted else 0, self.use_pallas)
+                budget if budgeted else 0, self.use_pallas, self.tile_rows)
             sv = self._fetch(statvec)
             while budgeted and bool(sv[SV_OVERFLOW]):
                 overflow_retries += 1   # surfaced in last_stats / result
@@ -471,7 +483,7 @@ class VertexProgramRunner:
                 budget *= 2            # HBM-reader queue overflow: deepen
                 frontier, seen, value, statvec = step(
                     g, *state0, np.int32(lvl), program, budget,
-                    self.use_pallas)
+                    self.use_pallas, self.tile_rows)
                 sv = self._fetch(statvec)
             lvl += 1
             inspected += int(sv[SV_TOTAL])
@@ -589,9 +601,10 @@ class MultiSourceBFSRunner(VertexProgramRunner):
     def __init__(self, g: LocalGraph, sched: SchedulerConfig | None = None,
                  init_budget: int = 1 << 15, use_pallas: bool = False,
                  packed: bool = True,
-                 max_overflow_retries: int | None = None):
+                 max_overflow_retries: int | None = None,
+                 tile_rows: int | None = None):
         super().__init__(g, BFS, sched, init_budget, use_pallas,
-                         max_overflow_retries)
+                         max_overflow_retries, tile_rows)
         self.packed = packed
 
     def run(self, roots, *, budget: int | None = None) -> VertexProgramResult:

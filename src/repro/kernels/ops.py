@@ -13,16 +13,151 @@ import numpy as np
 
 from repro.kernels.bitmap_update import bitmap_update, bitmap_update_batch
 from repro.kernels.csr_gather import gather_pages
-from repro.kernels.msbfs_propagate import msbfs_propagate_planes
+from repro.kernels.msbfs_propagate import (msbfs_propagate_planes,
+                                           msbfs_propagate_planes_tiled)
 from repro.kernels.pull_spmv import pull_spmv_blocks
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
+# VMEM budget for one propagate call's plane working set.  The whole-VMEM
+# kernel keeps 4 plane arrays resident (frontier/seen/new/vout); above this
+# budget ``msbfs_propagate`` switches to the row-tiled kernel.  ~2 MiB
+# leaves headroom (of TPU's ~16 MiB VMEM) for the double-buffered message
+# stream and the scalar-prefetch arrays.
+PROPAGATE_VMEM_BYTES = int(os.environ.get("REPRO_PROPAGATE_VMEM_BYTES",
+                                          2 * 1024 * 1024))
+
+
+def _plane_footprint_bytes(n_rows: int, nw: int) -> int:
+    """Whole-VMEM kernel working set: 4 plane arrays incl. the trash row."""
+    return 4 * (n_rows + 1) * nw * 4
+
+
+def _auto_tile_rows(nw: int, vmem_bytes: int) -> int:
+    """Tile-size rule: the tiled kernel holds ~8 row-tile-sized buffers
+    (seen + new + vout tiles, their pipeline double-buffers, and slack for
+    the streamed message chunks), so budget 32*nw bytes per row and round
+    down to the 8-row sublane multiple (int32 min tile is (8, 128))."""
+    return max((vmem_bytes // (32 * nw)) // 8 * 8, 8)
+
+
+def _auto_block_edges(m: int, nw: int, vmem_bytes: int | None = None) -> int:
+    """Edge-chunk length for the streamed message blocks.
+
+    Two pressures.  The grid runs one step per chunk, so a fixed
+    1024-edge chunk at graph500-class budgets (m ~ 16M edges per pull
+    level on rmat20) means tens of thousands of grid steps — pure
+    pipeline overhead, and interpret mode inlines every step at trace
+    time.  The chunk therefore grows with m, targeting <= 256 real-edge
+    steps.  Against that, one streamed msg block (block_edges * nw * 4
+    bytes) must stay a small fraction (1/8) of the VMEM budget so it can
+    double-buffer beside the resident plane tiles.  Always a multiple of
+    the 1024 floor, so sub-1024 budgets share one compiled shape."""
+    vmem = PROPAGATE_VMEM_BYTES if vmem_bytes is None else vmem_bytes
+    cap = max((vmem // (8 * 4 * nw)) // 1024 * 1024, 1024)
+    need = -(-(-(-m // 256)) // 1024) * 1024
+    return int(min(max(need, 1024), cap))
+
+
+def propagate_plan(n_rows: int, nw: int, tile_rows: int | None = None,
+                   vmem_bytes: int | None = None) -> dict:
+    """Whole-VMEM vs row-tiled selection for ``msbfs_propagate``.
+
+    ``tile_rows``: None = auto (tile iff the 4-plane footprint exceeds the
+    VMEM budget), 0 = force whole-VMEM, > 0 = force tiling at that size.
+    Returns dict(tiled, tile_rows, num_tiles, footprint_bytes).
+    """
+    vmem = PROPAGATE_VMEM_BYTES if vmem_bytes is None else vmem_bytes
+    fp = _plane_footprint_bytes(n_rows, nw)
+    if tile_rows == 0 or (tile_rows is None and fp <= vmem):
+        return dict(tiled=False, tile_rows=0, num_tiles=1,
+                    footprint_bytes=fp)
+    if tile_rows is None:
+        tile_rows = _auto_tile_rows(nw, vmem)
+    tile_rows = int(tile_rows)
+    if tile_rows < 1:
+        raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
+    return dict(tiled=True, tile_rows=tile_rows,
+                num_tiles=-(-n_rows // tile_rows), footprint_bytes=fp)
+
+
+def _bucket_edges_by_tile(msg: jax.Array, tgt: jax.Array, ok: jax.Array,
+                          num_tiles: int, tile_rows: int, block_edges: int):
+    """Bucket a budgeted edge list by target row tile (jnp, jit-static).
+
+    Builds the streamed inputs of ``msbfs_propagate_planes_tiled``: a
+    stable sort groups edges by ``tgt // tile_rows``, each tile's bucket is
+    cut into ``block_edges``-sized chunks, and the chunks are laid out
+    tile-major so ``chunk_tile`` is nondecreasing (the kernel's
+    accumulator-persistence invariant).  Degree-aware budget tiling falls
+    out of the counting: chunk capacity is allocated per tile from the
+    ACTUAL bucket sizes, so a hub vertex whose in-edges concentrate on one
+    tile simply gets more chunks there — the total stays within the static
+    ceil(m / C) + T bound (each tile wastes at most one partial chunk, and
+    empty tiles get one pad chunk so their P3 still fires).
+
+    msg: uint32[m, nw] pre-gathered frontier words (invalid slots zeroed).
+    tgt: int32[m] global target rows; ``ok`` False slots are dropped.
+    Returns (stream_msg uint32[L, nw], stream_tgt int32[L],
+    chunk_tile int32[NC]) with L = NC * block_edges; pad slots carry
+    msg = 0 aimed at their chunk's tile base row (a combine no-op).
+    """
+    m, nw = msg.shape
+    t_, c_ = num_tiles, block_edges
+    num_chunks = -(-m // c_) + t_
+    l_ = num_chunks * c_
+    tile = jnp.where(ok, tgt // tile_rows, t_).astype(jnp.int32)
+    order = jnp.argsort(tile)                      # stable in jax
+    tile_s = tile[order]
+    counts = jnp.bincount(tile, length=t_ + 1).astype(jnp.int32)
+    seg_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(m, dtype=jnp.int32) - seg_start[tile_s]
+    chunks_per_tile = jnp.maximum(-(-counts[:t_] // c_), 1)
+    chunk_off = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(chunks_per_tile)[:-1]])
+    pos = jnp.where(tile_s < t_,
+                    chunk_off[jnp.minimum(tile_s, t_ - 1)] * c_ + rank,
+                    l_).astype(jnp.int32)
+    # tile id per chunk; trailing unused chunks ride the last tile so the
+    # sequence stays nondecreasing and the last tile's P3 stays last
+    chunk_tile = jnp.searchsorted(
+        jnp.cumsum(chunks_per_tile), jnp.arange(num_chunks, dtype=jnp.int32),
+        side="right").astype(jnp.int32)
+    chunk_tile = jnp.minimum(chunk_tile, t_ - 1)
+    stream_msg = jnp.zeros((l_, nw), jnp.uint32).at[pos].set(
+        msg[order], mode="drop")
+    default_tgt = chunk_tile[jnp.arange(l_) // c_] * tile_rows
+    stream_tgt = default_tgt.at[pos].set(
+        jnp.where(ok, tgt, 0).astype(jnp.int32)[order], mode="drop")
+    return stream_msg, stream_tgt, chunk_tile
+
+
+def _propagate_tiled(seen_w: jax.Array, msg: jax.Array, tgt: jax.Array,
+                     ok: jax.Array, tile_rows: int, block_edges: int,
+                     interpret: bool, op: str):
+    """Shared tiled-path tail: pad rows to a tile multiple, bucket, run."""
+    n, nw = seen_w.shape
+    t_ = -(-n // tile_rows)
+    r_ = t_ * tile_rows
+    if r_ > n:
+        # pad rows: seen all-ones, so stray writes never count as
+        # discoveries (the tiled path's analogue of the trash row)
+        seen_w = jnp.concatenate(
+            [seen_w, jnp.full((r_ - n, nw), 0xFFFFFFFF, jnp.uint32)])
+    sm, st, ct = _bucket_edges_by_tile(msg, tgt, ok, t_, tile_rows,
+                                       block_edges)
+    new, vout, cnt = msbfs_propagate_planes_tiled(
+        seen_w, sm, st, ct, tile_rows=tile_rows, block_edges=block_edges,
+        interpret=interpret, op=op)
+    return new[:n], vout[:n], cnt[0, 0]
+
 
 def msbfs_propagate(frontier_w: jax.Array, seen_w: jax.Array,
                     src: jax.Array, tgt: jax.Array, valid: jax.Array,
-                    block_edges: int = 1024, interpret: bool | None = None,
-                    op: str = "or"):
+                    block_edges: int | None = None,
+                    interpret: bool | None = None,
+                    op: str = "or", tile_rows: int | None = None):
     """Fused P2->P3 vertex-program propagate: gather ``frontier_w[src]``
     words and scatter-combine them into the candidate planes at ``tgt``
     (``op``: "or" for bit-planes, "max" for payload planes), then commit
@@ -30,7 +165,12 @@ def msbfs_propagate(frontier_w: jax.Array, seen_w: jax.Array,
 
     frontier_w/seen_w: uint32[n_pad, nw] packed plane words.
     src/tgt: int32[m] edge endpoints; slots with ``valid`` False (or any
-    out-of-range index) are dropped.  Returns (new, seen_out, new_count).
+    out-of-range index) are dropped.  ``tile_rows`` picks the kernel
+    variant (see :func:`propagate_plan`): by default graphs whose 4-plane
+    working set exceeds ``PROPAGATE_VMEM_BYTES`` run the row-tiled kernel.
+    ``block_edges`` (None = auto, :func:`_auto_block_edges`) is the
+    streamed edge-chunk length — one grid step each.
+    Returns (new, seen_out, new_count).
     """
     if interpret is None:
         interpret = INTERPRET
@@ -39,33 +179,88 @@ def msbfs_propagate(frontier_w: jax.Array, seen_w: jax.Array,
     if m == 0:
         new = jnp.zeros_like(frontier_w)
         return new, seen_w, jnp.int32(0)
+    if block_edges is None:
+        block_edges = _auto_block_edges(m, nw)
+    ok = valid & (src >= 0) & (src < n) & (tgt >= 0) & (tgt < n)
+    plan = propagate_plan(n, nw, tile_rows)
+    if plan["tiled"]:
+        # pre-gather the messages (an XLA HBM gather): the tiled kernel
+        # streams them per tile and never holds the frontier in VMEM
+        msg = jnp.where(ok[:, None], frontier_w[jnp.maximum(src, 0)],
+                        jnp.uint32(0))
+        return _propagate_tiled(seen_w, msg, tgt, ok, plan["tile_rows"],
+                                block_edges, interpret, op)
     # trash row n: zero frontier mask (contributes nothing), all-ones seen
     # (so the trash candidates never count as discoveries)
     f1 = jnp.concatenate([frontier_w, jnp.zeros((1, nw), jnp.uint32)])
     s1 = jnp.concatenate(
         [seen_w, jnp.full((1, nw), 0xFFFFFFFF, jnp.uint32)])
-    ok = valid & (src >= 0) & (src < n) & (tgt >= 0) & (tgt < n)
     sidx = jnp.where(ok, src, n).astype(jnp.int32)
     tidx = jnp.where(ok, tgt, n).astype(jnp.int32)
-    blk = min(block_edges, m)
-    pad = (-m) % blk
+    # always pad m up to whole ``block_edges`` chunks: baking a raw small
+    # m into the static block size compiled a fresh pallas_call per
+    # distinct tiny budget
+    pad = (-m) % block_edges
     if pad:
         sidx = jnp.pad(sidx, (0, pad), constant_values=n)
         tidx = jnp.pad(tidx, (0, pad), constant_values=n)
     new, vout, cnt = msbfs_propagate_planes(f1, s1, sidx, tidx,
-                                            block_edges=blk,
+                                            block_edges=block_edges,
                                             interpret=interpret, op=op)
     return new[:-1], vout[:-1], cnt[0, 0]
+
+
+def msbfs_propagate_msgs(seen_w: jax.Array, msg: jax.Array, tgt: jax.Array,
+                         valid: jax.Array, tile_rows: int | None = None,
+                         block_edges: int | None = None,
+                         interpret: bool | None = None, op: str = "or"):
+    """Msgs-form fused propagate: like :func:`msbfs_propagate` but with the
+    frontier gather already done — ``msg[e]`` is the packed plane word edge
+    ``e`` carries into row ``tgt[e]``.  This is the natural entry when the
+    gather happens under a different sharding than the scatter (the
+    distributed pull path gathers from the all-gathered global frontier
+    but scatters into shard-local rows).  Always runs the row-tiled
+    kernel; ``tile_rows`` defaults to the auto rule of
+    :func:`propagate_plan`.  Returns (new, seen_out, new_count).
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    n, nw = seen_w.shape
+    m = tgt.shape[0]
+    if m == 0:
+        new = jnp.zeros_like(seen_w)
+        return new, seen_w, jnp.int32(0)
+    if block_edges is None:
+        block_edges = _auto_block_edges(m, nw)
+    if tile_rows is None:
+        tile_rows = min(_auto_tile_rows(nw, PROPAGATE_VMEM_BYTES), n)
+    tile_rows = int(tile_rows)
+    if tile_rows < 1:
+        raise ValueError(f"tile_rows must be >= 1, got {tile_rows}")
+    ok = valid & (tgt >= 0) & (tgt < n)
+    msg = jnp.where(ok[:, None], msg, jnp.uint32(0))
+    return _propagate_tiled(seen_w, msg, tgt, ok, tile_rows, block_edges,
+                            interpret, op)
+
+
+def _pad_rows_to_block(rows: int, cap: int = 16) -> tuple[int, int]:
+    """Grid plan for the row-blocked P3 kernels: ``block_rows = min(rows,
+    cap)`` with ``rows`` padded up to a whole multiple.  (The old plan
+    hunted for an exact divisor <= cap, which degrades to 1-row blocks —
+    a ``rows``-step grid — whenever the row count is prime.)  The pad rows
+    are zeros: cand 0 & ~visited contributes no new bits and no count."""
+    block = min(rows, cap)
+    return -(-rows // block) * block, block
 
 
 def fused_frontier_update(cand_words: jax.Array, visited_words: jax.Array):
     """P3 update on flat uint32[w] words; returns (new, visited, count)."""
     w = cand_words.shape[0]
     rows = max((w + 127) // 128, 1)
-    pad = rows * 128 - w
-    c2 = jnp.pad(cand_words, (0, pad)).reshape(rows, 128)
-    v2 = jnp.pad(visited_words, (0, pad)).reshape(rows, 128)
-    block_rows = _largest_divisor(rows, 16)
+    rows_pad, block_rows = _pad_rows_to_block(rows)
+    pad = rows_pad * 128 - w
+    c2 = jnp.pad(cand_words, (0, pad)).reshape(rows_pad, 128)
+    v2 = jnp.pad(visited_words, (0, pad)).reshape(rows_pad, 128)
     nf, vo, cnt = bitmap_update(c2, v2, block_rows=block_rows,
                                 interpret=INTERPRET)
     return (nf.reshape(-1)[:w], vo.reshape(-1)[:w], cnt[0, 0])
@@ -78,21 +273,14 @@ def fused_frontier_update_batch(cand_words: jax.Array,
     along (the MS-BFS per-source-word discovery counters)."""
     g, w = cand_words.shape
     rows = max((w + 127) // 128, 1)
-    pad = rows * 128 - w
-    c2 = jnp.pad(cand_words, ((0, 0), (0, pad))).reshape(g, rows, 128)
-    v2 = jnp.pad(visited_words, ((0, 0), (0, pad))).reshape(g, rows, 128)
-    block_rows = _largest_divisor(rows, 16)
+    rows_pad, block_rows = _pad_rows_to_block(rows)
+    pad = rows_pad * 128 - w
+    c2 = jnp.pad(cand_words, ((0, 0), (0, pad))).reshape(g, rows_pad, 128)
+    v2 = jnp.pad(visited_words, ((0, 0), (0, pad))).reshape(g, rows_pad, 128)
     nf, vo, cnt = bitmap_update_batch(c2, v2, block_rows=block_rows,
                                       interpret=INTERPRET)
     return (nf.reshape(g, -1)[:, :w], vo.reshape(g, -1)[:, :w],
             cnt.reshape(g))
-
-
-def _largest_divisor(n: int, cap: int) -> int:
-    for d in range(min(cap, n), 0, -1):
-        if n % d == 0:
-            return d
-    return 1
 
 
 def build_page_table(starts: np.ndarray, degrees: np.ndarray, page: int,

@@ -48,6 +48,31 @@ def msbfs_propagate_planes_ref(frontier: jax.Array, seen: jax.Array,
     return nf, seen | nf, cnt
 
 
+def msbfs_propagate_msgs_ref(seen: jax.Array, msg: jax.Array,
+                             tgt: jax.Array, valid: jax.Array,
+                             op: str = "or"):
+    """Oracle for kernels.ops.msbfs_propagate_msgs (msgs-form tiled path).
+
+    Unpadded semantics: scatter-combine ``msg[e]`` into row ``tgt[e]``
+    for every valid in-range edge, then P3.  The tiled kernel's bucketing
+    and pad rows/slots must be invisible against this.
+    """
+    n = seen.shape[0]
+    ok = valid & (tgt >= 0) & (tgt < n)
+    msg = jnp.where(ok[:, None], msg, jnp.uint32(0))
+    tgt = jnp.where(ok, tgt, n)
+    if op == "or":
+        from repro.core.bitmap import _scatter_or_rows
+        cand = _scatter_or_rows(jnp.zeros_like(seen), tgt, msg)
+    elif op == "max":
+        cand = jnp.zeros_like(seen).at[tgt].max(msg, mode="drop")
+    else:
+        raise ValueError(f"op must be 'or' or 'max', got {op!r}")
+    nf = cand & ~seen
+    cnt = jnp.sum(jax.lax.population_count(nf).astype(jnp.int32))
+    return nf, seen | nf, cnt
+
+
 def gather_pages_ref(edges_paged: jax.Array, page_ids: jax.Array):
     """Oracle for kernels.csr_gather.gather_pages."""
     return edges_paged[page_ids]

@@ -65,6 +65,63 @@ def test_pad_plane_slots_rejects_empty():
         bitmap.pad_plane_slots(np.asarray([], np.int64))
 
 
+def test_pad_plane_slots_validates_fill():
+    roots = np.asarray([4, 9, 2], np.int64)
+    with pytest.raises(TypeError):
+        bitmap.pad_plane_slots(roots, fill=1.5)
+    with pytest.raises(TypeError):
+        bitmap.pad_plane_slots(roots, fill=True)    # bool is not a vertex
+    with pytest.raises(TypeError):
+        bitmap.pad_plane_slots(roots, fill="0")
+    with pytest.raises(ValueError):
+        bitmap.pad_plane_slots(roots, fill=-1)
+    slots, b = bitmap.pad_plane_slots(roots, fill=np.int64(7))
+    assert b == 3 and (slots[3:] == 7).all()
+    slots, b = bitmap.pad_plane_slots(roots, fill=0)
+    assert (slots[3:] == 0).all()
+    # full word: fill is validated but unused
+    full = np.arange(32, dtype=np.int64)
+    slots, b = bitmap.pad_plane_slots(full, fill=5)
+    assert b == 32 and slots.size == 32
+
+
+@pytest.mark.parametrize("b", [1, 31, 33])
+def test_pad_slots_inert_in_wave_accounting(graph, engine, b):
+    """Pad slots (duplicate planes) must be invisible END TO END: the
+    wave's sliced levels equal the per-root oracle, WaveStats counts
+    traversed edges over the REAL requests only (a padded B=1 wave must
+    not report 32x the edges), and edge traffic matches an unpadded run
+    of the same roots (a duplicate plane never changes the union
+    frontier)."""
+    from repro.core import count_traversed_edges
+    csr, g = graph
+    roots = np.random.default_rng(100 + b).choice(256, b,
+                                                  replace=False).tolist()
+    batcher = DynamicBatcher(engine, window=1.0, max_batch=64,
+                             clock=FakeClock())
+    futures = [batcher.submit(int(r), block=False) for r in roots]
+    waves = batcher.flush()
+    assert len(waves) == 1
+    ws = waves[0]
+    assert ws.batch == b and ws.n_slots == ((b + 31) // 32) * 32
+    oracle_rows = np.stack([bfs_oracle(csr, int(r)) for r in roots])
+    for f, want in zip(futures, oracle_rows):
+        np.testing.assert_array_equal(f.result(), want)
+    # TEPS numerator over real requests only == slice-then-count
+    assert ws.traversed_edges == count_traversed_edges(
+        np.asarray(engine.out_deg), oracle_rows)
+    # duplicate pad planes leave the union frontier (and so the per-level
+    # edge traffic) unchanged: an unpadded engine run inspects the same
+    # number of edges
+    res = engine.run(np.asarray(roots, np.int64))
+    assert ws.edges_inspected == res.edges_inspected
+    np.testing.assert_array_equal(
+        bitmap.slice_plane_rows(np.vstack([oracle_rows,
+                                           oracle_rows[:1].repeat(
+                                               ws.n_slots - b, 0)]), b),
+        oracle_rows)
+
+
 @pytest.mark.parametrize("b,slots", [(1, 32), (32, 32), (33, 64)])
 def test_padded_slots_never_leak_into_results(graph, engine, b, slots):
     """End-to-end pad/slice round trip through a real wave: B=1, B an

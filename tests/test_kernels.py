@@ -61,6 +61,44 @@ def test_fused_frontier_update_flat_odd_sizes():
         np.testing.assert_array_equal(np.asarray(vo), np.asarray(v | (c & ~v)))
 
 
+def test_pad_rows_to_block_never_degrades_to_one_row():
+    """Regression: the old divisor hunt returned block_rows=1 for prime
+    row counts (a rows-step grid of 1-row blocks); the pad plan must keep
+    full-size blocks and only pad the row count up."""
+    assert ops._pad_rows_to_block(17) == (32, 16)       # prime
+    assert ops._pad_rows_to_block(16) == (16, 16)       # exact
+    assert ops._pad_rows_to_block(5) == (5, 5)          # under the cap
+    assert ops._pad_rows_to_block(1) == (1, 1)
+    assert ops._pad_rows_to_block(30) == (32, 16)
+    for rows in range(1, 200):
+        rows_pad, block = ops._pad_rows_to_block(rows)
+        assert rows_pad % block == 0 and rows_pad >= rows
+        assert block == min(rows, 16)                   # never 1-row-deep
+
+
+def test_fused_frontier_update_prime_rows_unchanged():
+    """Prime row count (w = 17 * 128 -> 17 rows) through both P3 wrappers:
+    2-step grid of 16-row blocks, results identical to the jnp oracle."""
+    w = 17 * 128
+    rng = np.random.default_rng(17)
+    c = rng.integers(0, 2**32, (w,), dtype=np.uint32)
+    v = rng.integers(0, 2**32, (w,), dtype=np.uint32)
+    nf, vo, cnt = ops.fused_frontier_update(jnp.asarray(c), jnp.asarray(v))
+    want_new = c & ~v
+    np.testing.assert_array_equal(np.asarray(nf), want_new)
+    np.testing.assert_array_equal(np.asarray(vo), v | want_new)
+    assert int(cnt) == int(np.unpackbits(want_new.view(np.uint8)).sum())
+    cb = np.stack([c, rng.integers(0, 2**32, w, dtype=np.uint32)])
+    vb = np.stack([v, rng.integers(0, 2**32, w, dtype=np.uint32)])
+    nfb, vob, cnts = ops.fused_frontier_update_batch(jnp.asarray(cb),
+                                                     jnp.asarray(vb))
+    np.testing.assert_array_equal(np.asarray(nfb), cb & ~vb)
+    np.testing.assert_array_equal(np.asarray(vob), vb | (cb & ~vb))
+    for i in range(2):
+        assert int(cnts[i]) == int(
+            np.unpackbits((cb[i] & ~vb[i]).view(np.uint8)).sum())
+
+
 # ---------------------------------------------------------------------------
 # msbfs_propagate (fused P2->P3 gather/scatter-OR over packed plane words)
 # ---------------------------------------------------------------------------
@@ -154,6 +192,36 @@ def test_msbfs_propagate_wrapper_masks_and_pads():
     np.testing.assert_array_equal(np.asarray(new), want_new)
     np.testing.assert_array_equal(np.asarray(vout), seen | want_new)
     assert int(cnt) == int(np.unpackbits(want_new.view(np.uint8)).sum())
+
+
+def test_msbfs_propagate_small_budgets_single_compile():
+    """Regression: tiny edge budgets (m < block_edges) used to bake the
+    raw m into the static block size, compiling a fresh pallas_call per
+    distinct small m.  All small budgets must now pad up to ONE fixed
+    block shape — exactly one jit cache entry across differing waves."""
+    from repro.kernels.msbfs_propagate import msbfs_propagate_planes
+    if not (hasattr(msbfs_propagate_planes, "clear_cache")
+            and hasattr(msbfs_propagate_planes, "_cache_size")):
+        pytest.skip("jit cache introspection unavailable on this JAX")
+    msbfs_propagate_planes.clear_cache()
+    n, nw = 12, 1
+    rng = np.random.default_rng(2)
+    f = jnp.asarray(rng.integers(0, 2**32, (n, nw), dtype=np.uint32))
+    s = jnp.zeros((n, nw), jnp.uint32)
+    outs = {}
+    for m in (3, 7, 13, 50, 640):
+        src = jnp.arange(m, dtype=jnp.int32) % n
+        tgt = (jnp.arange(m, dtype=jnp.int32) * 3) % n
+        outs[m] = ops.msbfs_propagate(f, s, src, tgt,
+                                      jnp.ones((m,), bool), interpret=True)
+    assert msbfs_propagate_planes._cache_size() == 1
+    # and the padded runs still match the per-edge oracle
+    for m, (new, vout, cnt) in outs.items():
+        cand = np.zeros((n, nw), np.uint32)
+        for e in range(m):
+            cand[(e * 3) % n] |= np.asarray(f)[e % n]
+        np.testing.assert_array_equal(np.asarray(new), cand)
+        assert int(cnt) == int(np.unpackbits(cand.view(np.uint8)).sum())
 
 
 def test_scatter_or_rows_matches_loop():
