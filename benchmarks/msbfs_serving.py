@@ -288,6 +288,112 @@ def run_chaos(graph: str = "rmat16-16", requests: int = 64,
     }
 
 
+def run_matrix(graph: str = "rmat16-16", requests: int = 128,
+               rates: tuple = (128.0, 512.0, 1024.0), slo: float = 2.0,
+               passes: int = 3, window: float = 0.25,
+               policy: str = "beamer", seed: int = 0) -> dict:
+    """Load matrix: Poisson arrival-rate sweep x two serving stacks.
+
+    * ``baseline``  — the pre-PR operating point: dense-pull engine,
+      ``max_batch=32`` (one plane word), no pipelining.
+    * ``pipelined`` — the production stack: sparse-budgeted-pull engine,
+      ``max_batch=96`` (three plane words), cutter/dispatcher/finisher
+      pipelining.
+
+    Every request carries ``deadline=slo``, so each cell reports
+    p50/p99/p99.9 AND the SLO-miss-rate at that arrival rate.  Shared
+    hosts show 30-40% phase noise over seconds, so the two arms are
+    measured INTERLEAVED per pass (baseline, pipelined, x``passes``) and
+    the gate takes the best SAME-PASS ratio at the saturating (highest)
+    rate — the claim is about the serving stack, not about which arm a
+    host hiccup landed on (same protocol as the chaos arm's 10% gate).
+    """
+    ds = get_dataset(graph)
+    g = build_local_graph(ds.csr, ds.csc)
+    deg = np.diff(ds.csr.indptr)
+    rng = np.random.default_rng(seed)
+    roots = rng.choice(np.flatnonzero(deg > 0), requests,
+                       replace=True).astype(np.int64)
+    arms = {
+        "baseline": dict(engine=MultiSourceBFSRunner(
+            g, SchedulerConfig(policy=policy)),
+            max_batch=32, pipeline=False),
+        "pipelined": dict(engine=MultiSourceBFSRunner(
+            g, SchedulerConfig(policy=policy), sparse_pull=True),
+            max_batch=96, pipeline=True),
+    }
+    for arm in arms.values():
+        for m in plane_wave_sizes(arm["max_batch"]):
+            arm["engine"].run(np.resize(roots, m))
+
+    def _drive(arm, rate):
+        batcher = DynamicBatcher(arm["engine"], out_deg=deg,
+                                 window=window,
+                                 max_batch=arm["max_batch"],
+                                 pipeline=arm["pipeline"])
+        t0 = time.monotonic()
+        drive_open_loop(batcher, roots, rate=rate,
+                        rng=np.random.default_rng(seed + 1), deadline=slo)
+        wall = time.monotonic() - t0
+        s = batcher.stats()
+        s["wall_seconds"] = round(wall, 4)
+        s["delivered_teps"] = round(s["traversed_edges"] / max(wall, 1e-12),
+                                    1)
+        return s
+
+    rows, ratios_by_rate = [], {}
+    for rate in rates:
+        per_arm = {name: [] for name in arms}
+        for _ in range(passes):
+            for name, arm in arms.items():   # interleaved: one pass each
+                per_arm[name].append(_drive(arm, rate))
+        ratios = [p["aggregate_teps"] / max(b["aggregate_teps"], 1e-12)
+                  for b, p in zip(per_arm["baseline"],
+                                  per_arm["pipelined"])]
+        ratios_by_rate[rate] = [round(r, 4) for r in ratios]
+        for name in arms:
+            best = max(per_arm[name], key=lambda s: s["aggregate_teps"])
+            rows.append(dict(
+                mode=name, rate=rate, waves=best["waves"],
+                busy_seconds=best["busy_seconds"],
+                engine_idle_seconds=best["engine_idle_seconds"],
+                aggregate_teps=best["aggregate_teps"],
+                delivered_teps=best["delivered_teps"],
+                latency_p50=best["latency_p50"],
+                latency_p99=best["latency_p99"],
+                latency_p999=best["latency_p999"],
+                slo_miss_rate=best.get("slo_miss_rate", 0.0)))
+    sat = max(rates)
+    gate_ratio = float(np.max(ratios_by_rate[sat]))
+    return {"graph": graph, "requests": requests, "rates": list(rates),
+            "slo": slo, "window": window, "passes": passes,
+            "policy": policy,
+            "arms": {"baseline": dict(max_batch=32, pipeline=False,
+                                      sparse_pull=False),
+                     "pipelined": dict(max_batch=96, pipeline=True,
+                                       sparse_pull=True)},
+            "rows": rows,
+            "pass_ratios_by_rate": {str(r): v
+                                    for r, v in ratios_by_rate.items()},
+            "saturating_rate": sat,
+            "teps_ratio_pipelined_vs_baseline": round(gate_ratio, 4),
+            "gate_1p3x": bool(gate_ratio >= 1.3)}
+
+
+def check_matrix(out: dict) -> list[str]:
+    """The ``--matrix --check`` gate."""
+    bad = []
+    if not out["gate_1p3x"]:
+        bad.append("pipelined multi-word serving fell below the 1.3x "
+                   "aggregate-TEPS gate at the saturating rate "
+                   f"(ratio {out['teps_ratio_pipelined_vs_baseline']})")
+    for row in out["rows"]:
+        if "slo_miss_rate" not in row or "latency_p999" not in row:
+            bad.append(f"row {row.get('mode')}@{row.get('rate')} is "
+                       "missing SLO/percentile accounting")
+    return bad
+
+
 def check_chaos(out: dict) -> list[str]:
     """The ``--chaos --check`` gate: the failures CI would fail on."""
     bad = []
@@ -328,6 +434,19 @@ def main():
     ap.add_argument("--chaos", action="store_true",
                     help="run the fault-injection arm through the "
                          "EngineSupervisor instead of the plain benchmark")
+    ap.add_argument("--matrix", action="store_true",
+                    help="run the load matrix: Poisson rate sweep x "
+                         "{baseline single-word, pipelined multi-word} "
+                         "with per-rate p50/p99/p99.9 + SLO-miss-rate")
+    ap.add_argument("--rates", type=float, nargs="+",
+                    default=[128.0, 512.0, 1024.0],
+                    help="arrival rates for --matrix (highest = the "
+                         "saturating gate point)")
+    ap.add_argument("--slo", type=float, default=2.0,
+                    help="per-request relative deadline for --matrix")
+    ap.add_argument("--passes", type=int, default=3,
+                    help="interleaved measurement passes per rate "
+                         "(--matrix)")
     ap.add_argument("--fault-rate", type=float, default=0.1,
                     help="per-engine-call Bernoulli fault rate (chaos)")
     ap.add_argument("--out", metavar="PATH",
@@ -338,8 +457,34 @@ def main():
                          "non-poisoned answers match the fault-free "
                          "reference, and the policy bounds held")
     args = ap.parse_args()
-    if args.check and not args.chaos:
-        ap.error("--check gates the chaos arm; add --chaos")
+    if args.check and not (args.chaos or args.matrix):
+        ap.error("--check gates the chaos or matrix arm; add --chaos "
+                 "or --matrix")
+    if args.chaos and args.matrix:
+        ap.error("--chaos and --matrix are separate arms; pick one")
+    if args.matrix:
+        out = run_matrix(graph=args.graph,
+                         requests=args.requests or 128,
+                         rates=tuple(args.rates), slo=args.slo,
+                         passes=args.passes,
+                         window=args.window or 0.25,
+                         policy=args.policy)
+        save("msbfs_serving_matrix", out)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(out, f, indent=2, default=str)
+        print_rows("msbfs_serving_matrix", out["rows"])
+        print(f"  pipelined/baseline aggregate TEPS at saturating rate "
+              f"{out['saturating_rate']}: "
+              f"{out['teps_ratio_pipelined_vs_baseline']} "
+              f"(gate >= 1.3x: {out['gate_1p3x']})")
+        if args.check:
+            bad = check_matrix(out)
+            if bad:
+                raise SystemExit("matrix check FAILED: " + "; ".join(bad))
+            print("  matrix check passed: pipelined multi-word serving "
+                  "holds the 1.3x gate with per-rate SLO accounting")
+        return
     requests = args.requests or (64 if args.chaos else 96)
     window = args.window or (0.25 if args.chaos else 0.5)
     if args.chaos:

@@ -227,6 +227,60 @@ def _propagate_pull_scan(g: LocalGraph, frontier_w):
                      scan[jnp.maximum(g.in_seg_end, 0)], jnp.uint32(0))
 
 
+def _propagate_pull_sparse(g: LocalGraph, frontier_w, seen_w, nb: int,
+                           budget: int):
+    """Budgeted pull: expand ONLY some-plane-unseen vertices' in-lists.
+
+    The dense scan pull re-reads the whole CSC stream every level even when
+    almost every vertex is already seen; the paper's pull reads just the
+    unvisited vertices' in-lists (bounded by m_u).  This is the jnp
+    analogue: expand_edges over the unseen-any set is vertex-major, so the
+    segment boundaries fall out of the cumulative degrees and the same
+    segmented OR-scan reduces each in-list — over ``budget`` edges instead
+    of E.  Pays off on tail levels where m_u << E; the driver keeps the
+    dense scan for full-stream levels (the expansion bookkeeping costs
+    more per edge than the static-boundary scan).
+
+    Returns (new, seen2, total); ``total > budget`` means the step was
+    truncated and must be retried deeper (same overflow contract as push).
+    """
+    pmask = bitmap.plane_mask(nb)
+    un_any = bitmap.any_rows(~seen_w & pmask)
+    active, _ = compact_indices(un_any, g.n_pad)
+    a = jnp.maximum(active, 0)
+    deg = (g.in_indptr[a + 1] - g.in_indptr[a]) * (active >= 0)
+    cum = jnp.cumsum(deg)
+    total = cum[-1]
+    e = jnp.arange(budget, dtype=jnp.int32)
+    owner = jnp.searchsorted(cum, e, side="right").astype(jnp.int32)
+    owner_c = jnp.minimum(owner, active.shape[0] - 1)
+    start = cum[owner_c] - deg[owner_c]
+    child = active[owner_c]
+    eidx = g.in_indptr[jnp.maximum(child, 0)] + (e - start)
+    valid = e < total
+    parent = g.in_indices[jnp.where(valid, eidx, 0)]
+    msg = jnp.where(valid[:, None], frontier_w[parent], jnp.uint32(0))
+    scan = bitmap.segment_or_rows(msg, e == start)
+    # one segment end per active vertex -> unique scatter targets, so a
+    # plain row set (mode="drop" for the pad slots) lands the per-vertex OR
+    endpos = jnp.clip(cum - 1, 0, budget - 1)
+    rows = jnp.where((deg > 0) & (active >= 0), active, g.n_pad)
+    cand = jnp.zeros((g.n_pad + 1, frontier_w.shape[1]), jnp.uint32)
+    cand = cand.at[rows].set(scan[endpos], mode="drop")[:-1]
+    new = cand & ~seen_w
+    return new, seen_w | new, total
+
+
+@jax.jit
+def _plane_traversed(g: LocalGraph, value):
+    """int32[B]: per-plane traversed edges = sum of out-degrees over the
+    vertices each plane reached (the paper's TEPS numerator, one entry per
+    source so pad planes can be sliced off without a host recount)."""
+    reached = value[: g.n] < INF
+    return jnp.sum(jnp.where(reached, g.out_deg[: g.n, None], 0),
+                   axis=0, dtype=jnp.int32)
+
+
 @partial(jax.jit, static_argnames=("program",))
 def vp_init_state(g: LocalGraph, roots: jax.Array, program: VertexProgram):
     frontier, seen, value = program.init(g, roots)
@@ -260,9 +314,12 @@ def vp_pull_step(g: LocalGraph, frontier_w, seen_w, value, lvl,
                  use_pallas: bool = False, tile_rows: int | None = None):
     """Batched pull on packed words.
 
-    Default path: dense segmented OR-scan over the whole CSC edge stream
-    (never overflows, no budget).  Pallas path: budgeted expansion of
-    some-plane-unseen vertices through the fused propagate kernel."""
+    Default path (``budget == 0``): dense segmented OR-scan over the whole
+    CSC edge stream (never overflows).  ``budget > 0`` selects the sparse
+    budgeted pull — only some-plane-unseen vertices' in-lists are expanded
+    (``_propagate_pull_sparse``), which the driver uses on tail levels
+    where m_u << E.  Pallas path: budgeted expansion through the fused
+    propagate kernel."""
     if use_pallas:
         un_any = bitmap.any_rows(
             ~seen_w & bitmap.plane_mask(value.shape[1]))
@@ -272,6 +329,10 @@ def vp_pull_step(g: LocalGraph, frontier_w, seen_w, value, lvl,
         new, seen2 = _propagate_edges(g, frontier_w, seen_w, parent, child,
                                       valid, True, program.combine,
                                       tile_rows)
+        overflow = total > budget
+    elif budget:
+        new, seen2, total = _propagate_pull_sparse(
+            g, frontier_w, seen_w, value.shape[1], budget)
         overflow = total > budget
     else:
         cand = _propagate_pull_scan(g, frontier_w)
@@ -378,7 +439,7 @@ class VertexProgramRunner:
                  sched: SchedulerConfig | None = None,
                  init_budget: int = 1 << 15, use_pallas: bool = False,
                  max_overflow_retries: int | None = None,
-                 tile_rows: int | None = None):
+                 tile_rows: int | None = None, sparse_pull: bool = False):
         self.g = g
         self.program = program if program is not None else type(self).program
         self.sched = sched or SchedulerConfig()
@@ -388,6 +449,10 @@ class VertexProgramRunner:
         # (kernels.ops.propagate_plan), 0 = force whole-VMEM, > 0 = force
         # row tiles of that many vertices
         self.tile_rows = tile_rows
+        # budgeted pull on tail levels where m_u is far below the full CSC
+        # stream (see _propagate_pull_sparse); off by default to preserve
+        # the dense scan's cost model (edges_inspected counts E per pull)
+        self.sparse_pull = sparse_pull
         # None = deepen forever (absorb overflow silently, the historical
         # behavior); an int bounds per-wave re-runs and surfaces persistent
         # overflow as BudgetOverflowError for the serving FT layer
@@ -411,6 +476,23 @@ class VertexProgramRunner:
     def _fetch(self, arr) -> np.ndarray:
         self._transfers += 1
         return np.asarray(arr)
+
+    def _fetch_pair(self, a, b):
+        """One blocking device->host round trip for two device values."""
+        self._transfers += 1
+        return jax.device_get((a, b))
+
+    def _pull_budget(self, m_u: int) -> int:
+        """Sparse-pull budget for this level, or 0 to keep the dense scan.
+
+        ``m_u`` bounds the expansion exactly (every some-plane-unseen
+        vertex contributes its whole in-list), so the next power of two
+        above it can never overflow.  The sparse path's per-edge cost is
+        several times the static-boundary scan's, so it only engages well
+        below the full CSC stream — full-ish levels stay dense."""
+        cap = int(self.g.in_indices.shape[0])
+        pb = 1 << max(12, (max(m_u, 1) - 1).bit_length())
+        return pb if pb * 8 <= cap else 0
 
     def run(self, roots, *, budget: int | None = None) -> VertexProgramResult:
         # validate BEFORE the int32 cast: a >= 2**31 root must error, not
@@ -458,31 +540,39 @@ class VertexProgramRunner:
                                     int(sv[SV_MF]), int(sv[SV_MU]), g.n,
                                     int(sv[SV_NU]))
             # the scan-based pull is dense over the CSC edge stream: only
-            # push (and the budgeted Pallas pull) need an edge budget
+            # push (and the budgeted Pallas/sparse pulls) need a budget
             budgeted = mode == PUSH or self.use_pallas
+            step_budget = 0
             if budgeted:
                 need = int(sv[SV_MF]) if mode == PUSH else int(sv[SV_MU])
                 cap = (g.out_indices if mode == PUSH
                        else g.in_indices).shape[0]
                 while budget < min(need, cap + 1):
                     budget *= 2
+                step_budget = budget
+            elif self.sparse_pull:
+                # per-level choice (NOT the ratcheting push budget): tail
+                # levels shrink, so the pull budget must shrink with them
+                step_budget = self._pull_budget(int(sv[SV_MU]))
             step = vp_push_step if mode == PUSH else vp_pull_step
             # retry from the PRE-step seen: an overflowed (truncated) step
             # may have committed a partial discovery set
             state0 = (frontier, seen, value)
             frontier, seen, value, statvec = step(
-                g, *state0, np.int32(lvl), program,
-                budget if budgeted else 0, self.use_pallas, self.tile_rows)
+                g, *state0, np.int32(lvl), program, step_budget,
+                self.use_pallas, self.tile_rows)
             sv = self._fetch(statvec)
-            while budgeted and bool(sv[SV_OVERFLOW]):
+            while step_budget and bool(sv[SV_OVERFLOW]):
                 overflow_retries += 1   # surfaced in last_stats / result
                 if (self.max_overflow_retries is not None
                         and overflow_retries > self.max_overflow_retries):
-                    raise BudgetOverflowError(budget, int(sv[SV_MF]),
+                    raise BudgetOverflowError(step_budget, int(sv[SV_MF]),
                                               overflow_retries)
-                budget *= 2            # HBM-reader queue overflow: deepen
+                step_budget *= 2       # HBM-reader queue overflow: deepen
+                if budgeted:
+                    budget = step_budget
                 frontier, seen, value, statvec = step(
-                    g, *state0, np.int32(lvl), program, budget,
+                    g, *state0, np.int32(lvl), program, step_budget,
                     self.use_pallas, self.tile_rows)
                 sv = self._fetch(statvec)
             lvl += 1
@@ -493,14 +583,25 @@ class VertexProgramRunner:
                 pull_iters += 1
         value.block_until_ready()
         dt = time.perf_counter() - t0
-        rows = self._fetch(value[: g.n]).T           # [B, n]
+        # per-plane traversed-edge counts, computed ON DEVICE and fetched
+        # with the value rows in ONE blocking transfer (host_transfers
+        # stays iterations + 2).  Each plane's count is <= E so int32 is
+        # safe; the cross-plane sum happens on host in int64.  The numpy
+        # recount this replaces cost tens of ms per wide wave.
+        rows_cm, trav_np = self._fetch_pair(value[: g.n],
+                                            _plane_traversed(g, value))
+        rows = rows_cm.T                             # [B, n]
         return self._result(rows, b, lvl, inspected, push_iters,
-                            pull_iters, dt, overflow_retries, budget)
+                            pull_iters, dt, overflow_retries, budget,
+                            trav_vec=trav_np)
 
     def _result(self, rows, b, lvl, inspected, push_iters, pull_iters,
-                dt, overflow_retries: int = 0,
-                budget: int = 0) -> VertexProgramResult:
-        traversed = count_traversed_edges(self._out_deg_np, rows)
+                dt, overflow_retries: int = 0, budget: int = 0,
+                trav_vec: np.ndarray | None = None) -> VertexProgramResult:
+        if trav_vec is None:
+            traversed = count_traversed_edges(self._out_deg_np, rows)
+        else:
+            traversed = int(np.sum(trav_vec, dtype=np.int64))
         res = VertexProgramResult(
             levels=rows, batch=b, iterations=lvl, edges_inspected=inspected,
             push_iters=push_iters, pull_iters=pull_iters,
@@ -514,6 +615,12 @@ class VertexProgramRunner:
             seconds=res.seconds, host_transfers=res.host_transfers,
             algo=res.algo, overflow_retries=res.overflow_retries,
             budget=res.budget)
+        if trav_vec is not None:
+            # per-plane counts let the serving layer account pad slots out
+            # of TEPS without re-counting from the sliced level rows
+            # (plain ints: last_stats must stay JSON-serializable)
+            self.last_stats["traversed_per_plane"] = [
+                int(x) for x in trav_vec]
         return res
 
 
@@ -602,9 +709,9 @@ class MultiSourceBFSRunner(VertexProgramRunner):
                  init_budget: int = 1 << 15, use_pallas: bool = False,
                  packed: bool = True,
                  max_overflow_retries: int | None = None,
-                 tile_rows: int | None = None):
+                 tile_rows: int | None = None, sparse_pull: bool = False):
         super().__init__(g, BFS, sched, init_budget, use_pallas,
-                         max_overflow_retries, tile_rows)
+                         max_overflow_retries, tile_rows, sparse_pull)
         self.packed = packed
 
     def run(self, roots, *, budget: int | None = None) -> VertexProgramResult:

@@ -278,6 +278,7 @@ class EngineSupervisor:
         self._tunable = find_tunable_engine(engine)
         self._budget_hint: int | None = None
         self._zombie: threading.Thread | None = None
+        self._wave_deadline_override: float | None = None
         self.last_stats: dict = {}
         # lifetime counters (stats() snapshot)
         self._n_waves = self._n_traversals = self._n_fault_waves = 0
@@ -316,6 +317,15 @@ class EngineSupervisor:
         """
         if not self.watchdog:
             return None
+        if self._wave_deadline_override is not None:
+            # per-wave SLO from the serving layer (run_wave(deadline=)):
+            # floored at min_deadline so a nearly-expired SLO still gets
+            # one real attempt instead of an instant timeout, and capped
+            # by the configured wave_deadline when both are set
+            d = max(float(self._wave_deadline_override), self.min_deadline)
+            if self.wave_deadline is not None:
+                d = min(d, float(self.wave_deadline))
+            return d * self._deadline_scale
         if self.wave_deadline is not None:
             return float(self.wave_deadline) * self._deadline_scale
         med = self.timer.median()
@@ -326,22 +336,32 @@ class EngineSupervisor:
 
     # -- the supervised wave ---------------------------------------------
 
-    def run_wave(self, roots) -> SupervisedWave:
+    def run_wave(self, roots,
+                 deadline: float | None = None) -> SupervisedWave:
         """Serve a wave of roots under the full fault policy.
 
         EVERY root resolves: ``outcomes[i]`` carries either its level row
         or a typed error (``WaveTimeout`` / ``WaveAbandoned`` /
         ``RequestQuarantined`` / the original deterministic error for a
         singleton wave).  Never raises for engine failures.
+
+        ``deadline`` (seconds, relative) overrides the watchdog deadline
+        for THIS wave only — the serving layer passes the tightest
+        remaining request SLO here, so the watchdog enforces it during
+        execution (including retries and bisection sub-waves) rather than
+        letting a doomed wave run to the statistical deadline.  Requires
+        the watchdog to be enabled; floored at ``min_deadline``.
         """
         roots = np.asarray(roots)
         wave = SupervisedWave(
             roots=roots,
             outcomes=[RootOutcome(int(r)) for r in roots])
         snapshot = self._snapshot_knobs()
+        self._wave_deadline_override = deadline
         try:
             self._serve(wave, roots, wave.outcomes)
         finally:
+            self._wave_deadline_override = None
             if not self.sticky_demotions:
                 self._restore_knobs(snapshot)
                 self._deadline_scale = 1.0

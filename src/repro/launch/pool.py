@@ -1,0 +1,178 @@
+"""Worker pool: several MS-BFS engines behind ONE submit surface.
+
+One ``DynamicBatcher`` keeps one engine busy; a pool keeps several —
+the serving analogue of ScalaBFS running 64 processing elements against
+32 HBM pseudo-channels, where aggregate throughput comes from many
+independent workers, not one wider one.  ``WorkerPool`` owns one
+:class:`~repro.launch.dynbatch.DynamicBatcher` per engine (each with its
+own bounded queue, worker thread, and optionally its own
+``EngineSupervisor``) and routes every ``submit`` to the least-loaded
+worker:
+
+* Routing is JOIN-SHORTEST-QUEUE on ``DynamicBatcher.backlog()``
+  (queued + cut-but-unfinished requests), with a round-robin tiebreak so
+  an idle pool still spreads waves across engines instead of pinning
+  everything to worker 0.
+* SLO semantics (``deadline=`` / ``priority=``) pass straight through —
+  each worker cuts its own waves urgency-first, and ``stats()`` merges
+  the per-worker SLO accounting into one pool-wide miss rate.
+* Backpressure composes: a non-blocking submit that finds EVERY worker's
+  queue full raises ``QueueFull``; a blocking submit waits on the least
+  backlogged worker.
+* Engines must be INDEPENDENT (their own runner instances — device graph
+  arrays may be shared, traversal state is per-runner).  Threads over
+  local ``MultiSourceBFSRunner`` instances today; ``DistributedBFS``
+  meshes slot in unchanged once multi-host meshes land (ROADMAP item 3).
+
+Fake-clock testing works like the single batcher: construct with
+``clock=`` (workers then run no threads) and drive with :meth:`pump` /
+:meth:`flush`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.launch.dynbatch import (BFSFuture, DynamicBatcher, QueueFull,
+                                   WaveStats)
+
+
+class WorkerPool:
+    """Route single-root BFS queries across a pool of per-engine batchers.
+
+    ``engines``: independent engine instances (one worker each).  Every
+    other keyword is forwarded to each worker's ``DynamicBatcher`` —
+    ``window``, ``max_batch``, ``pipeline``, ``slo_margin``, ``clock``,
+    etc., so the pool's workers are homogeneous by construction.
+    """
+
+    def __init__(self, engines, *, out_deg: np.ndarray | None = None,
+                 **batcher_kw):
+        engines = list(engines)
+        if not engines:
+            raise ValueError("WorkerPool needs at least one engine")
+        self.workers: list[DynamicBatcher] = [
+            DynamicBatcher(e, out_deg=out_deg, **batcher_kw)
+            for e in engines]
+        self._rr = 0                      # round-robin tiebreak cursor
+        self._closed = False
+
+    # -- client side ------------------------------------------------------
+
+    def _ranked(self) -> list[int]:
+        """Worker indices by (backlog, round-robin distance) ascending."""
+        n = len(self.workers)
+        loads = [w.backlog() for w in self.workers]
+        order = sorted(range(n),
+                       key=lambda i: (loads[i], (i - self._rr) % n))
+        self._rr = (order[0] + 1) % n
+        return order
+
+    def submit(self, root: int, *, block: bool = True,
+               timeout: float | None = None, deadline: float | None = None,
+               priority: int = 0) -> BFSFuture:
+        """Enqueue one query on the least-backlogged worker.
+
+        Non-blocking submits fail over: if the chosen worker's queue is
+        full the next-least-loaded one is tried, and ``QueueFull`` only
+        propagates when EVERY worker is at capacity.  Blocking submits
+        wait on the least-loaded worker (its thread is draining it).
+        """
+        order = self._ranked()
+        if block:
+            return self.workers[order[0]].submit(
+                root, block=True, timeout=timeout, deadline=deadline,
+                priority=priority)
+        last: QueueFull | None = None
+        for i in order:
+            try:
+                return self.workers[i].submit(
+                    root, block=False, deadline=deadline,
+                    priority=priority)
+            except QueueFull as exc:
+                last = exc
+        raise QueueFull(
+            f"all {len(self.workers)} worker queues full") from last
+
+    def backlog(self) -> int:
+        return sum(w.backlog() for w in self.workers)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close(drain=exc == (None, None, None))
+
+    # -- scheduler (fake-clock mode) --------------------------------------
+
+    def pump(self, force: bool = False) -> list[WaveStats]:
+        """Dispatch at most one due wave PER WORKER (fake-clock mode)."""
+        out = []
+        for w in self.workers:
+            ws = w.pump(force)
+            if ws is not None:
+                out.append(ws)
+        return out
+
+    def flush(self) -> list[WaveStats]:
+        """Dispatch everything pending on every worker, deadlines
+        ignored."""
+        return [ws for w in self.workers for ws in w.flush()]
+
+    def close(self, drain: bool = True, timeout: float | None = None):
+        """Close every worker (serially; each drains its own queue)."""
+        self._closed = True
+        for w in self.workers:
+            w.close(drain=drain, timeout=timeout)
+
+    # -- reporting --------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Pool-wide aggregate: exact totals summed across workers,
+        latency percentiles over the POOLED per-wave latencies (so one
+        slow worker shows up in the pool's p99, not just its own), plus
+        each worker's own stats under ``per_worker``.
+        """
+        per = [w.stats() for w in self.workers]
+        lats: list[float] = []
+        for w in self.workers:
+            with w._cond:
+                lats.extend(l for wave in w.waves for l in wave.latencies)
+        out = dict(
+            workers=len(self.workers),
+            waves=sum(p["waves"] for p in per),
+            errors=sum(p["errors"] for p in per),
+            requests=sum(p["requests"] for p in per),
+            busy_seconds=round(sum(p["busy_seconds"] for p in per), 4),
+            engine_idle_seconds=round(
+                sum(p["engine_idle_seconds"] for p in per), 4),
+            pipeline=any(p["pipeline"] for p in per),
+        )
+        n_failed = sum(p.get("requests_failed", 0) for p in per)
+        if n_failed:
+            out["requests_failed"] = n_failed
+        n_slo = sum(p.get("slo_requests", 0) for p in per)
+        if n_slo:
+            n_miss = sum(p.get("slo_misses", 0) for p in per)
+            out.update(slo_requests=n_slo, slo_misses=n_miss,
+                       slo_miss_rate=round(n_miss / n_slo, 4))
+        if any("traversed_edges" in p for p in per):
+            trav = sum(p.get("traversed_edges", 0) for p in per)
+            busy = sum(p["busy_seconds"] for p in per)
+            # engine-busy TEPS: edges per second of ENGINE time summed
+            # across workers — wall-clock delivered throughput is the
+            # harness's job (it knows the stream's makespan, we don't)
+            out.update(traversed_edges=int(trav),
+                       aggregate_teps=round(trav / max(busy, 1e-12), 1))
+        if lats:
+            a = np.asarray(lats, np.float64)
+            out.update(
+                latency_mean=round(float(a.mean()), 4),
+                latency_p50=round(float(np.percentile(a, 50)), 4),
+                latency_p99=round(float(np.percentile(a, 99)), 4),
+                latency_p999=round(float(np.percentile(a, 99.9)), 4),
+            )
+        if any("fault_tolerance" in p for p in per):
+            out["fault_tolerance"] = [p.get("fault_tolerance")
+                                      for p in per]
+        out["per_worker"] = per
+        return out

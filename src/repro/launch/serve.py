@@ -97,7 +97,8 @@ def greedy_decode(arch: str, reduced: bool, batch: int, prompt_len: int,
 
 
 def build_engine(graph: str, *, algo: str = "bfs",
-                 distributed: bool | None = None, pes_per_device: int = 2):
+                 distributed: bool | None = None, pes_per_device: int = 2,
+                 sparse_pull: bool = False):
     """Build a vertex-program query engine with the graph device-resident.
 
     ``algo``: "bfs" | "cc" | "sssp" (the shipped vertex programs — CC
@@ -108,6 +109,11 @@ def build_engine(graph: str, *, algo: str = "bfs",
     the program (2 PEs per PC by default, the paper's Table II shape).
     The engine is meant to be built once and reused across ``bfs_batch``
     calls — the graph arrays stay device-resident between queries.
+
+    ``sparse_pull=True`` enables the budgeted pull path on the local
+    runners (tail pull levels expand only unvisited vertices' in-lists
+    instead of scanning the whole CSC stream — the paper's actual pull
+    semantics); the distributed engine ignores it for now.
     """
     from repro.core import (ConnectedComponentsRunner, MultiSourceBFSRunner,
                             SSSPRunner, build_local_graph, get_program,
@@ -133,7 +139,8 @@ def build_engine(graph: str, *, algo: str = "bfs",
     runner_cls = {"bfs": MultiSourceBFSRunner,
                   "cc": ConnectedComponentsRunner,
                   "sssp": SSSPRunner}[algo]
-    return runner_cls(build_local_graph(csr, csc)), deg
+    return runner_cls(build_local_graph(csr, csc),
+                      sparse_pull=sparse_pull), deg
 
 
 def build_bfs_engine(graph: str, *, distributed: bool | None = None,
@@ -198,6 +205,8 @@ def serve_bfs(graph: str, batch: int, seed: int = 0,
 def serve_bfs_async(graph: str, requests: int = 64, window: float = 0.05,
                     max_batch: int = 32, rate: float | None = None,
                     seed: int = 0, algo: str = "bfs",
+                    workers: int = 1, pipeline: bool = False,
+                    slo: float | None = None, sparse_pull: bool = False,
                     ft_max_retries: int | None = None,
                     ft_wave_deadline: float | None = None,
                     ft_chaos: float | None = None) -> dict:
@@ -208,6 +217,16 @@ def serve_bfs_async(graph: str, requests: int = 64, window: float = 0.05,
     ``algo`` picks the vertex program — the batcher itself is
     engine-agnostic (the ``BFSEngine`` protocol), so CC and SSSP waves
     coalesce exactly like BFS waves.
+
+    Production-serving knobs (ROADMAP item 3): ``max_batch`` may span
+    multiple plane words (e.g. 96 = three words per wave);
+    ``pipeline=True`` cuts/pads wave N+1 while wave N traverses;
+    ``slo`` attaches that relative deadline (seconds) to every request
+    so waves cut urgency-first and ``stats()`` reports the miss rate;
+    ``workers > 1`` runs a :class:`~repro.launch.pool.WorkerPool` of
+    engines (sharing one device-resident graph) behind one submit
+    surface, each worker supervised independently when fault tolerance
+    is on.
 
     Fault tolerance: ``ft_max_retries`` / ``ft_wave_deadline`` wrap the
     engine in an ``EngineSupervisor`` (typed retries, quarantine
@@ -223,31 +242,51 @@ def serve_bfs_async(graph: str, requests: int = 64, window: float = 0.05,
     from repro.launch.dynbatch import (DynamicBatcher, drive_open_loop,
                                        plane_wave_sizes)
 
-    engine, deg = build_engine(graph, algo=algo)
+    if workers < 1:
+        raise ValueError(f"need workers >= 1, got {workers}")
+    engine, deg = build_engine(graph, algo=algo, sparse_pull=sparse_pull)
     rng = np.random.default_rng(seed)
     roots = rng.choice(np.flatnonzero(deg > 0), requests, replace=True)
     for m in plane_wave_sizes(max_batch):      # warm-up / compile
         bfs_batch(np.resize(roots, m), engine=engine, out_deg=deg)
+    # extra workers share the device-resident graph; jit caches are
+    # module-level so the warm-up above covers every worker's shapes
+    if workers > 1 and not hasattr(engine, "g"):
+        raise ValueError("workers > 1 needs local runner engines "
+                         "(DistributedBFS pools are a ROADMAP item)")
+    engines = [engine] + [type(engine)(engine.g, sparse_pull=sparse_pull)
+                          for _ in range(workers - 1)]
     supervised = (ft_max_retries is not None or ft_wave_deadline is not None
                   or ft_chaos is not None)
     if supervised:
         from repro.ft import EngineSupervisor, FaultPlan, FaultyEngine
-        if ft_chaos:
-            # rough horizon: every request could end up a singleton wave
-            plan = FaultPlan.random(max(2 * requests, 16), ft_chaos,
-                                    seed=seed)
-            engine = FaultyEngine(engine, plan)
-        engine = EngineSupervisor(
-            engine,
-            max_retries=2 if ft_max_retries is None else ft_max_retries,
-            wave_deadline=ft_wave_deadline)
-    batcher = DynamicBatcher(engine, out_deg=deg, window=window,
-                             max_batch=max_batch)
+        wrapped = []
+        for i, e in enumerate(engines):
+            if ft_chaos:
+                # rough horizon: every request could end up a singleton
+                # wave; each worker draws an independent fault schedule
+                plan = FaultPlan.random(max(2 * requests, 16), ft_chaos,
+                                        seed=seed + i)
+                e = FaultyEngine(e, plan)
+            wrapped.append(EngineSupervisor(
+                e,
+                max_retries=2 if ft_max_retries is None else ft_max_retries,
+                wave_deadline=ft_wave_deadline))
+        engines = wrapped
+    kw = dict(out_deg=deg, window=window, max_batch=max_batch,
+              pipeline=pipeline)
+    if len(engines) > 1:
+        from repro.launch.pool import WorkerPool
+        batcher = WorkerPool(engines, **kw)
+    else:
+        batcher = DynamicBatcher(engines[0], **kw)
     drive_open_loop(batcher, roots, rate=rate, rng=rng,
-                    raise_errors=not supervised)
+                    raise_errors=not supervised, deadline=slo)
     out = batcher.stats()
     out.update(graph=graph, algo=algo, requests=requests, window=window,
                max_batch=max_batch, rate=rate)
+    if slo is not None:
+        out["slo"] = slo
     return out
 
 
@@ -280,6 +319,19 @@ def main():
     ap.add_argument("--bfs-rate", type=float,
                     help="open-loop Poisson arrival rate in req/s "
                          "(default: submit as fast as possible)")
+    ap.add_argument("--bfs-workers", type=int, default=1,
+                    help="engine worker pool size (async serving; "
+                         "engines share the device-resident graph)")
+    ap.add_argument("--bfs-pipeline", action="store_true",
+                    help="pipeline wave cutting against the engine "
+                         "(cutter/dispatcher/finisher stages)")
+    ap.add_argument("--bfs-slo", type=float,
+                    help="attach this relative deadline (seconds) to "
+                         "every request; waves cut urgency-first and "
+                         "stats report the SLO miss rate")
+    ap.add_argument("--bfs-sparse-pull", action="store_true",
+                    help="budgeted sparse pull on tail levels (reads "
+                         "only unvisited vertices' in-lists)")
     ap.add_argument("--ft-max-retries", type=int,
                     help="wrap the engine in an EngineSupervisor with this "
                          "transient-retry cap (async serving only)")
@@ -301,6 +353,10 @@ def main():
                               window=args.bfs_window,
                               max_batch=args.bfs_max_batch,
                               rate=args.bfs_rate, algo=algo,
+                              workers=args.bfs_workers,
+                              pipeline=args.bfs_pipeline,
+                              slo=args.bfs_slo,
+                              sparse_pull=args.bfs_sparse_pull,
                               ft_max_retries=args.ft_max_retries,
                               ft_wave_deadline=args.ft_wave_deadline,
                               ft_chaos=args.ft_chaos)

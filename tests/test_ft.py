@@ -578,3 +578,35 @@ def test_supervisor_over_faulty_engine_end_to_end():
         if o.root != 6:
             np.testing.assert_array_equal(o.levels,
                                           expected_rows([o.root])[0])
+
+
+def test_per_wave_slo_deadline_overrides_watchdog():
+    """run_wave(deadline=) overrides the watchdog for one wave: floored
+    at min_deadline, capped by a configured wave_deadline, cleared
+    afterwards."""
+    sup = EngineSupervisor(ScriptedEngine(), wave_deadline=7.5)
+    sup._wave_deadline_override = 0.5
+    assert sup.current_deadline() == pytest.approx(
+        max(0.5, sup.min_deadline))
+    sup._wave_deadline_override = 0.01          # nearly-expired SLO
+    assert sup.current_deadline() == pytest.approx(sup.min_deadline)
+    sup._wave_deadline_override = 100.0         # lax SLO: config caps it
+    assert sup.current_deadline() == pytest.approx(7.5)
+    sup._wave_deadline_override = None
+    assert sup.current_deadline() == pytest.approx(7.5)
+
+
+def test_run_wave_deadline_guards_cold_engine():
+    """A per-wave SLO deadline arms the watchdog even on a COLD engine
+    (no history, no configured wave_deadline — the derived deadline
+    would be None): the stalled attempt is abandoned at ~min_deadline
+    and the retry serves, instead of riding out the stall."""
+    eng = StallEngine(stall=0.5)
+    sup = EngineSupervisor(eng, max_retries=2, backoff=0.0,
+                           pad_to_plane=False)
+    assert sup.current_deadline() is None       # cold, no SLO: unguarded
+    wave = sup.run_wave([1, 2], deadline=0.1)   # floored to min_deadline
+    assert wave.n_ok == 2
+    assert wave.timeouts == 1 and wave.retries == 1
+    assert sup._wave_deadline_override is None  # per-wave: cleared
+    assert sup.current_deadline() is None       # still cold-derived

@@ -1,0 +1,175 @@
+"""Worker pool serving (``repro.launch.pool``).
+
+A pool of independent MS-BFS runners (sharing one device-resident
+graph) behind a single submit surface: join-shortest-queue routing with
+a round-robin tiebreak, QueueFull failover, merged stats with pooled
+latency percentiles, SLO passthrough, and per-worker supervision.
+Fake-clock pools are deterministic (no threads); one threaded pipelined
+test covers the real-clock path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import MultiSourceBFSRunner, bfs_oracle, build_local_graph
+from repro.graph import csr_from_edges, transpose_csr, uniform_edges
+from repro.launch.dynbatch import BatcherClosed, QueueFull
+from repro.launch.pool import WorkerPool
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += float(dt)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    src, dst = uniform_edges(256, 1024, seed=7)
+    csr = csr_from_edges(src, dst, 256)
+    return csr, build_local_graph(csr, transpose_csr(csr))
+
+
+@pytest.fixture()
+def engines(graph):
+    # independent runners over ONE device-resident graph
+    return [MultiSourceBFSRunner(graph[1]) for _ in range(2)]
+
+
+def test_pool_needs_at_least_one_engine():
+    with pytest.raises(ValueError):
+        WorkerPool([])
+
+
+def test_pool_spreads_requests_and_matches_oracle(graph, engines):
+    """JSQ + round-robin routing: 8 back-to-back submits land 4/4 across
+    2 idle workers, and every future matches its per-root oracle."""
+    csr, _ = graph
+    deg = np.asarray(engines[0].out_deg)
+    pool = WorkerPool(engines, out_deg=deg, window=1.0, max_batch=32,
+                      clock=FakeClock())
+    roots = [2, 50, 100, 150, 200, 250, 33, 77]
+    futures = [pool.submit(r, block=False) for r in roots]
+    assert pool.backlog() == len(roots)
+    waves = pool.flush()
+    assert len(waves) == 2                  # one wave per worker
+    assert pool.backlog() == 0
+    for f, r in zip(futures, roots):
+        np.testing.assert_array_equal(np.asarray(f.result(), np.int64),
+                                      bfs_oracle(csr, r))
+    s = pool.stats()
+    assert s["workers"] == 2 and s["waves"] == 2
+    assert s["requests"] == len(roots)
+    assert [p["requests"] for p in s["per_worker"]] == [4, 4]
+    assert s["traversed_edges"] == sum(
+        p["traversed_edges"] for p in s["per_worker"])
+    assert s["latency_p99"] >= s["latency_p50"] >= 0
+    pool.close()
+
+
+def test_pool_routes_to_least_backlogged_worker(graph, engines):
+    """A busy worker stops receiving: queue 3 on the pool, flush only
+    worker 0's wave, then new submits must prefer the drained worker."""
+    pool = WorkerPool(engines, window=1.0, clock=FakeClock())
+    pool.submit(1, block=False)             # worker A (round-robin)
+    pool.submit(2, block=False)             # worker B
+    pool.submit(3, block=False)             # tie again -> A (or B): 2/1
+    loads = sorted(w.backlog() for w in pool.workers)
+    assert loads == [1, 2]
+    light = min(pool.workers, key=lambda w: w.backlog())
+    pool.submit(4, block=False)             # JSQ: must go to the light one
+    assert light.backlog() == 2
+    pool.flush()
+    pool.close()
+
+
+def test_pool_queuefull_failover_and_exhaustion(graph, engines):
+    """Non-blocking submit fails over to the other worker's queue and
+    only raises once EVERY queue is full."""
+    pool = WorkerPool(engines, window=1.0, max_pending=1,
+                      clock=FakeClock())
+    pool.submit(1, block=False)             # fills worker A
+    pool.submit(2, block=False)             # fails over to worker B
+    with pytest.raises(QueueFull):
+        pool.submit(3, block=False)         # both full
+    pool.flush()
+    pool.submit(3, block=False)             # capacity freed
+    pool.close(drain=True)
+
+
+def test_pool_slo_accounting_merges(graph, engines):
+    csr, _ = graph
+    clock = FakeClock()
+    pool = WorkerPool(engines, window=0.1, clock=clock, slo_margin=0.0)
+    f_ok = pool.submit(5, block=False, deadline=10.0)
+    f_late = pool.submit(7, block=False, deadline=0.5)
+    clock.advance(1.0)                      # f_late's deadline blown
+    pool.flush()
+    assert f_ok.slo_miss is False and f_late.slo_miss is True
+    s = pool.stats()
+    assert s["slo_requests"] == 2 and s["slo_misses"] == 1
+    assert s["slo_miss_rate"] == 0.5
+    np.testing.assert_array_equal(np.asarray(f_late.result(), np.int64),
+                                  bfs_oracle(csr, 7))
+    pool.close()
+
+
+def test_pool_close_closes_every_worker(graph, engines):
+    pool = WorkerPool(engines, window=1.0, clock=FakeClock())
+    f = pool.submit(9, block=False)
+    pool.close(drain=True)                  # drains despite open window
+    assert f.done() and f.exception() is None
+    for w in pool.workers:
+        with pytest.raises(BatcherClosed):
+            w.submit(1, block=False)
+
+
+def test_pool_per_worker_supervision(graph, engines):
+    """Each worker composes with its OWN EngineSupervisor: a poisoned
+    root quarantines on whichever worker it landed on, clean requests on
+    both workers serve correctly, and merged stats carry one
+    fault_tolerance block per worker."""
+    from repro.ft import EngineSupervisor, FaultyEngine, RequestQuarantined
+
+    csr, _ = graph
+    sups = [EngineSupervisor(FaultyEngine(e, poisoned_roots=[42]),
+                             backoff=0.0, watchdog=False)
+            for e in engines]
+    deg = np.asarray(engines[0].out_deg)
+    pool = WorkerPool(sups, out_deg=deg, window=1.0, clock=FakeClock())
+    roots = [3, 42, 17, 99]
+    futures = [pool.submit(r, block=False) for r in roots]
+    pool.flush()
+    for f, r in zip(futures, roots):
+        if r == 42:
+            assert isinstance(f.exception(), RequestQuarantined)
+        else:
+            np.testing.assert_array_equal(
+                np.asarray(f.result(timeout=0), np.int64),
+                bfs_oracle(csr, r))
+    s = pool.stats()
+    assert s["requests_failed"] == 1
+    assert len(s["fault_tolerance"]) == 2
+    assert sorted(q for ft in s["fault_tolerance"]
+                  for q in ft["quarantined"]) == [42]
+    pool.close()
+
+
+def test_threaded_pipelined_pool_matches_oracle(graph, engines):
+    """Real-clock pool with pipelined workers: the full production
+    topology (pool -> per-worker cutter/dispatcher/finisher)."""
+    csr, _ = graph
+    roots = [2, 50, 100, 150, 200, 250]
+    with WorkerPool(engines, window=0.02, max_batch=64,
+                    pipeline=True) as pool:
+        futures = [pool.submit(r) for r in roots]
+        levels = [f.result(timeout=120.0) for f in futures]
+    for lv, r in zip(levels, roots):
+        np.testing.assert_array_equal(np.asarray(lv, np.int64),
+                                      bfs_oracle(csr, r))
+    s = pool.stats()
+    assert s["pipeline"] is True and s["requests"] == len(roots)
