@@ -288,6 +288,186 @@ def run_chaos(graph: str = "rmat16-16", requests: int = 64,
     }
 
 
+def run_bitflip(graph: str = "rmat16-16", trials: int = 4,
+                clean_waves: int = 4, burst_waves: int = 8,
+                max_batch: int = 32, policy: str = "beamer", seed: int = 0,
+                integrity: str = "witness",
+                slo_factor: float = 3.0) -> dict:
+    """Bit-flip chaos + integrity detection + overload shedding record.
+
+    Three sub-experiments, all gated by ``check_bitflip``:
+
+    * PLANE FLIPS — ``trials`` waves each corrupted by one exact-once XOR
+      of a frontier plane word mid-traversal (a spurious discovery bit,
+      the class the device-side statvec residue is built to catch).  Gate:
+      every flip detected (an ``IntegrityError`` violation), every wave
+      recovered by the supervisor's retry with reference-matching rows.
+    * RESULT FLIPS — ``trials`` waves whose RETURNED rows get one bit-16
+      XOR after the engine finished (value lands outside ``[0, iters]``,
+      the class only the host row-bounds check can see).  Same gate.
+    * CLEAN SWEEP — ``clean_waves`` uncorrupted waves through the same
+      detector stack.  Gate: ZERO violations (no false positives).
+    * OVERLOAD BURST — ``burst_waves x max_batch`` deadline requests
+      submitted back-to-back (a ~``burst_waves/slo_factor``x overload for
+      an SLO of ``slo_factor`` wave times) through a shedding and a
+      non-shedding batcher.  Gate: the shedding arm's SERVED p99 beats
+      the non-shedding arm's, and every reject returned in under one
+      wave service time.
+    """
+    from repro.ft import (EngineSupervisor, FaultPlan, FaultyEngine,
+                          IntegrityConfig)
+    from repro.launch.dynbatch import Overloaded
+
+    ds = get_dataset(graph)
+    g = build_local_graph(ds.csr, ds.csc)
+    deg = np.diff(ds.csr.indptr)
+    rng = np.random.default_rng(seed)
+    base = rng.choice(np.flatnonzero(deg > 0), max_batch,
+                      replace=False).astype(np.int64)
+    runner = MultiSourceBFSRunner(g, SchedulerConfig(policy=policy))
+    for m in plane_wave_sizes(max_batch):
+        runner.run(np.resize(base, m))
+    ref_rows = np.asarray(runner.run(base).levels, np.int64)
+    ref = {int(r): ref_rows[i].copy() for i, r in enumerate(base)}
+    icfg = IntegrityConfig(mode=integrity)
+    INF = 1 << 30
+
+    def _wave_ok(wave):
+        return wave.n_failed == 0 and all(
+            np.array_equal(np.asarray(o.levels, np.int64), ref[o.root])
+            for o in wave.outcomes)
+
+    # -- clean sweep: no false positives ---------------------------------
+    clean_sup = EngineSupervisor(runner, watchdog=False, backoff=0.0,
+                                 integrity=icfg)
+    clean_all_ok = all(_wave_ok(clean_sup.run_wave(rng.permutation(base)))
+                       for _ in range(clean_waves))
+    clean_ig = clean_sup.stats()["integrity"]
+
+    # -- plane-word flips: device statvec residue must fire --------------
+    def _flip_trial(kind, spec_key, spec):
+        eng = FaultyEngine(runner, FaultPlan([(0, kind)]),
+                           **{spec_key: spec})
+        sup = EngineSupervisor(eng, max_retries=2, backoff=0.0,
+                               watchdog=False, integrity=icfg)
+        wave = sup.run_wave(base)
+        ig = sup.stats()["integrity"]
+        return dict(kind=kind, target=list(spec),
+                    detected=ig["violations"] >= 1,
+                    recovered=_wave_ok(wave),
+                    retries=wave.retries)
+
+    flips = []
+    for i in range(trials):
+        plane = i % max_batch
+        # a vertex far from plane's root: XOR at level 1 plants a
+        # spurious discovery bit (never a legitimate level-1 frontier
+        # member), so detection is deterministic, not frontier-density
+        # luck
+        far = np.flatnonzero((ref_rows[plane] >= 3)
+                             | (ref_rows[plane] == INF))
+        vtx = int(far[(7 * i) % far.size])
+        flips.append(_flip_trial("plane_flip", "plane_flip",
+                                 (1, vtx, plane)))
+    for i in range(trials):
+        flips.append(_flip_trial(
+            "result_flip", "result_flip",
+            (i % max_batch, int(base[(3 * i) % base.size]), 16)))
+    runner.integrity = "off"     # knobs pushed by the supervisors above
+    n_detected = sum(f["detected"] for f in flips)
+    n_recovered = sum(f["recovered"] for f in flips)
+
+    # -- overload burst: shedding vs queue-to-miss -----------------------
+    svc = min(runner.run(base).seconds for _ in range(3))
+    slo = slo_factor * svc
+    burst = rng.choice(np.flatnonzero(deg > 0),
+                       burst_waves * max_batch, replace=True)
+
+    def _burst_arm(shed):
+        b = DynamicBatcher(runner, out_deg=deg, window=min(svc, 0.05),
+                           max_batch=max_batch, shed=shed,
+                           service_hint=svc)
+        futs, rejects = [], []
+        for r in burst:
+            t0 = time.monotonic()
+            try:
+                futs.append(b.submit(int(r), deadline=slo))
+            except Overloaded:
+                rejects.append(time.monotonic() - t0)
+        b.close(drain=True)
+        served = [f.latency for f in futs if f.exception() is None]
+        st = b.stats()
+        return dict(
+            mode="shed" if shed else "no-shed",
+            admitted=len(futs), rejected=len(rejects),
+            served=len(served),
+            served_p99=round(float(np.percentile(served, 99)), 4),
+            slo_miss_rate=st.get("slo_miss_rate", 0.0),
+            max_reject_seconds=(round(max(rejects), 6) if rejects
+                                else 0.0),
+            unresolved=sum(1 for f in futs if not f.done()))
+
+    noshed = _burst_arm(False)
+    shed = _burst_arm(True)
+
+    return {
+        "graph": graph, "max_batch": max_batch, "policy": policy,
+        "integrity_mode": integrity, "trials_per_kind": trials,
+        "clean_waves": clean_waves,
+        "rows": [noshed, shed],
+        "flips": flips,
+        "flips_injected": len(flips),
+        "flips_detected": n_detected,
+        "flips_recovered": n_recovered,
+        "detection_rate": round(n_detected / max(len(flips), 1), 4),
+        "clean_violations": int(clean_ig["violations"]),
+        "clean_checks": int(clean_ig["checks"]),
+        "clean_rows_match": bool(clean_all_ok),
+        "shed_experiment": dict(
+            wave_service_seconds=round(svc, 4), slo=round(slo, 4),
+            burst_requests=int(burst.size),
+            overload_factor=round(burst_waves / slo_factor, 2),
+            served_p99_shed=shed["served_p99"],
+            served_p99_noshed=noshed["served_p99"],
+            shed_p99_wins=bool(shed["served_p99"]
+                               < noshed["served_p99"]),
+            rejects_under_one_wave=bool(
+                shed["max_reject_seconds"] < svc)),
+    }
+
+
+def check_bitflip(out: dict) -> list[str]:
+    """The ``--chaos --bitflip --check`` gate."""
+    bad = []
+    if out["flips_detected"] != out["flips_injected"]:
+        missed = [f["target"] for f in out["flips"] if not f["detected"]]
+        bad.append(f"integrity layer missed {missed} "
+                   f"({out['flips_detected']}/{out['flips_injected']} "
+                   "detected; gate is 100%)")
+    if out["flips_recovered"] != out["flips_injected"]:
+        bad.append("corrupted waves did not all recover with "
+                   "reference-matching rows "
+                   f"({out['flips_recovered']}/{out['flips_injected']})")
+    if out["clean_violations"]:
+        bad.append(f"{out['clean_violations']} false-positive violations "
+                   f"on {out['clean_waves']} clean waves (gate is 0)")
+    if not out["clean_rows_match"]:
+        bad.append("clean sweep rows diverged from the reference")
+    sx = out["shed_experiment"]
+    if not sx["shed_p99_wins"]:
+        bad.append("shedding arm's served p99 "
+                   f"({sx['served_p99_shed']}s) did not beat no-shedding "
+                   f"({sx['served_p99_noshed']}s) under overload")
+    if not sx["rejects_under_one_wave"]:
+        bad.append("a shed reject took longer than one wave service "
+                   "time")
+    for row in out["rows"]:
+        if row["unresolved"]:
+            bad.append(f"{row['unresolved']} admitted requests never "
+                       f"resolved in the {row['mode']} arm")
+    return bad
+
+
 def run_matrix(graph: str = "rmat16-16", requests: int = 128,
                rates: tuple = (128.0, 512.0, 1024.0), slo: float = 2.0,
                passes: int = 3, window: float = 0.25,
@@ -434,6 +614,15 @@ def main():
     ap.add_argument("--chaos", action="store_true",
                     help="run the fault-injection arm through the "
                          "EngineSupervisor instead of the plain benchmark")
+    ap.add_argument("--bitflip", action="store_true",
+                    help="with --chaos: run the bit-flip integrity + "
+                         "overload-shedding arm instead of the fault-mix "
+                         "stream (plane-word and result-row flips must "
+                         "be detected and recovered; shedding must beat "
+                         "queue-to-miss under a burst)")
+    ap.add_argument("--ft-integrity", default="witness",
+                    choices=("invariants", "witness", "audit"),
+                    help="detector tier for the --bitflip arm")
     ap.add_argument("--matrix", action="store_true",
                     help="run the load matrix: Poisson rate sweep x "
                          "{baseline single-word, pipelined multi-word} "
@@ -462,6 +651,36 @@ def main():
                  "or --matrix")
     if args.chaos and args.matrix:
         ap.error("--chaos and --matrix are separate arms; pick one")
+    if args.bitflip and not args.chaos:
+        ap.error("--bitflip is a chaos sub-arm; add --chaos")
+    if args.bitflip:
+        out = run_bitflip(graph=args.graph, max_batch=args.max_batch,
+                          policy=args.policy,
+                          integrity=args.ft_integrity)
+        save("msbfs_integrity", out)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(out, f, indent=2, default=str)
+        print_rows("msbfs_integrity", out["rows"])
+        sx = out["shed_experiment"]
+        print(f"  flips detected: {out['flips_detected']}"
+              f"/{out['flips_injected']} recovered: "
+              f"{out['flips_recovered']} clean false positives: "
+              f"{out['clean_violations']}/{out['clean_checks']} checks")
+        print(f"  burst {sx['burst_requests']} reqs @ slo {sx['slo']}s: "
+              f"served p99 shed {sx['served_p99_shed']}s vs no-shed "
+              f"{sx['served_p99_noshed']}s; max reject "
+              f"{out['rows'][1]['max_reject_seconds']}s "
+              f"(< wave {sx['wave_service_seconds']}s: "
+              f"{sx['rejects_under_one_wave']})")
+        if args.check:
+            bad = check_bitflip(out)
+            if bad:
+                raise SystemExit("bitflip check FAILED: " + "; ".join(bad))
+            print("  bitflip check passed: 100% detection, full "
+                  "recovery, zero false positives, shedding beats "
+                  "queue-to-miss")
+        return
     if args.matrix:
         out = run_matrix(graph=args.graph,
                          requests=args.requests or 128,

@@ -6,12 +6,13 @@ from repro.core.bfs_local import (BFSEngine, BFSResult, BFSRunner,
 from repro.core.partition import PartitionedGraph, partition_graph
 from repro.core.scheduler import (PULL, PUSH, SchedulerConfig, choose_mode,
                                   choose_mode_host)
-from repro.core.vertex_program import (BFS, CC, PROGRAMS, SSSP,
+from repro.core.vertex_program import (BFS, CC, INTEGRITY_MODES, PROGRAMS,
+                                       SSSP, SV_CHECK,
                                        BudgetOverflowError,
                                        ConnectedComponentsRunner,
-                                       MSBFSResult, MultiSourceBFSRunner,
-                                       SSSPRunner, VertexProgram,
-                                       VertexProgramResult,
+                                       IntegrityError, MSBFSResult,
+                                       MultiSourceBFSRunner, SSSPRunner,
+                                       VertexProgram, VertexProgramResult,
                                        VertexProgramRunner,
                                        component_labels, get_program,
                                        msbfs_reference, vp_reference)
@@ -23,6 +24,7 @@ __all__ = [
     "msbfs_reference", "validate_roots", "PartitionedGraph",
     "partition_graph", "PULL", "PUSH", "SchedulerConfig", "choose_mode",
     "choose_mode_host", "BFS", "CC", "SSSP", "PROGRAMS",
+    "INTEGRITY_MODES", "SV_CHECK", "IntegrityError",
     "BudgetOverflowError", "VertexProgram",
     "VertexProgramResult", "VertexProgramRunner",
     "ConnectedComponentsRunner", "SSSPRunner", "component_labels",

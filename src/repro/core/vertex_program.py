@@ -43,8 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitmap
-from repro.core.bfs_local import (INF, SV_MF, SV_MU, SV_NF, SV_NU,
-                                  SV_OVERFLOW, SV_TOTAL, LocalGraph,
+from repro.core.bfs_local import (INF, SV_COUNT, SV_MF, SV_MU, SV_NF,
+                                  SV_NU, SV_OVERFLOW, SV_TOTAL, LocalGraph,
                                   compact_indices, count_traversed_edges,
                                   expand_edges, validate_roots)
 from repro.core.scheduler import (PUSH, SchedulerConfig, choose_mode,
@@ -111,6 +111,22 @@ CC = VertexProgram(name="cc", undirected=True)
 SSSP = VertexProgram(name="sssp", commit=minplus_commit)
 
 
+class IntegrityError(RuntimeError):
+    """A traversal integrity invariant was violated — the wave's answer
+    cannot be trusted and must NOT be served.
+
+    ScalaBFS trusts HBM ECC and a fixed PE pipeline to deliver correct
+    frontier words; this software reproduction has no such guarantee, so
+    the engine (``VertexProgramRunner`` with ``integrity != "off"``) folds
+    cheap device-side invariant checks into the statvec protocol and
+    raises this error the moment a check fails mid-run.  The serving
+    supervisor (``repro.ft.EngineSupervisor``) classifies it as a
+    KERNEL-CLASS transient fault: the wave is retried, and repeated
+    violations walk the ``pallas -> jnp -> bool-plane`` demotion ladder —
+    a corrupted kernel rung is the prime suspect.
+    """
+
+
 class BudgetOverflowError(RuntimeError):
     """Push edge budget still overflowed after ``max_overflow_retries``.
 
@@ -159,10 +175,46 @@ def get_program(name: str) -> VertexProgram:
 # plane arrays, no scatter buffers.
 # ---------------------------------------------------------------------------
 
-def _vp_statvec(g: LocalGraph, new_w, seen_w, total, overflow, nb: int):
+# index of the OPTIONAL integrity slot appended to the statvec when a
+# runner has integrity checking on (the base int32[7] layout lives in
+# bfs_local; slot presence is a static jit choice, so clean runs pay it
+# neither in compute nor in transfer width)
+SV_CHECK = 7
+
+# runner integrity levels, strictly ordered by cost:
+#   off        — no checks (the historical engine)
+#   invariants — device-side statvec invariants + host popcount/row checks
+#   witness    — invariants + per-wave sampled parent-witness reduction
+#   audit      — witness at engine level; the supervisor additionally
+#                rate-samples a full differential audit against a
+#                reference path (see repro.ft.integrity)
+INTEGRITY_MODES = ("off", "invariants", "witness", "audit")
+
+
+def _integrity_chk(frontier_w, seen_w, nb: int):
+    """Device-side plane-word invariant residue (0 on an uncorrupted run).
+
+    Three invariants the packed pipeline maintains by construction, folded
+    into one popcount so the statvec grows by a single int32 slot:
+
+    * ``frontier ⊆ seen`` — every step's frontier is last step's ``new``,
+      which was OR-ed into ``seen`` in the same kernel.  A flipped plane
+      word that conjures a frontier bit for an unseen vertex breaks this.
+    * frontier pad bits beyond the true batch width are zero.
+    * seen pad bits beyond the true batch width are zero.
+    """
+    pmask = bitmap.plane_mask(nb)
+    return (bitmap.popcount(frontier_w & ~seen_w)
+            + bitmap.popcount(frontier_w & ~pmask)
+            + bitmap.popcount(seen_w & ~pmask))
+
+
+def _vp_statvec(g: LocalGraph, new_w, seen_w, total, overflow, nb: int,
+                chk=None):
     """Fused per-level stats: scheduler inputs for the NEXT level, this
     step's edge total/overflow, and the discovery popcount, stacked into
-    one int32[7] so the driver fetches a single array per level.
+    one int32[7] so the driver fetches a single array per level (int32[8]
+    with the integrity residue ``chk`` appended when checking is on).
 
     ``nb`` is the TRUE batch size: the pad planes of the last word are
     unseen by construction, so masking with the padded width would make
@@ -170,7 +222,7 @@ def _vp_statvec(g: LocalGraph, new_w, seen_w, total, overflow, nb: int):
     pmask = bitmap.plane_mask(nb)
     any_f = bitmap.any_rows(new_w)
     un_any = bitmap.any_rows(~seen_w & pmask)
-    return jnp.stack([
+    slots = [
         jnp.sum(any_f, dtype=jnp.int32),
         jnp.sum(jnp.where(any_f, g.out_deg, 0), dtype=jnp.int32),
         jnp.sum(jnp.where(un_any, g.in_deg, 0), dtype=jnp.int32),
@@ -178,16 +230,19 @@ def _vp_statvec(g: LocalGraph, new_w, seen_w, total, overflow, nb: int):
         jnp.asarray(total, jnp.int32),
         jnp.asarray(overflow, jnp.int32),
         bitmap.popcount(new_w),
-    ])
+    ]
+    if chk is not None:
+        slots.append(jnp.asarray(chk, jnp.int32))
+    return jnp.stack(slots)
 
 
 def _vp_commit(g: LocalGraph, program: VertexProgram, new_w, seen_w, value,
-               lvl, total, overflow):
+               lvl, total, overflow, chk=None):
     """Per-level apply (the pipeline's single unpack point) + fused stats."""
     new_mask = bitmap.unpack_rows(new_w, value.shape[1])
     value2 = program.commit(value, new_mask, lvl)
     return value2, _vp_statvec(g, new_w, seen_w, total, overflow,
-                               value.shape[1])
+                               value.shape[1], chk)
 
 
 def _propagate_edges(g: LocalGraph, frontier_w, seen_w, src, tgt, valid,
@@ -281,21 +336,74 @@ def _plane_traversed(g: LocalGraph, value):
                    axis=0, dtype=jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("program",))
-def vp_init_state(g: LocalGraph, roots: jax.Array, program: VertexProgram):
+@partial(jax.jit, static_argnames=("budget",))
+def _witness_check(g: LocalGraph, value, sample, budget: int):
+    """Sampled parent-witness audit, one fused reduction.
+
+    For every sampled vertex ``v`` and plane ``p`` with a finite non-root
+    value, SOME in-neighbor ``u`` must hold ``value[u,p] == value[v,p]-1``
+    — the parent that discovered it (level-synchronous BFS/CC and
+    unit-weight SSSP all satisfy this exactly).  The K sampled in-lists
+    are expanded with the same budgeted owner-slot pattern as the sparse
+    pull, the witness predicate is OR-reduced per (vertex, plane), and the
+    result collapses to int32[2] = (violations, truncated) so it folds
+    into the run's final fetch (``host_transfers`` invariant intact).
+    ``truncated != 0`` means the sampled in-lists overflowed ``budget``
+    and the violation count is unusable — the driver skips, not raises.
+    """
+    k = sample.shape[0]
+    deg = g.in_indptr[sample + 1] - g.in_indptr[sample]
+    cum = jnp.cumsum(deg)
+    total = cum[-1]
+    e = jnp.arange(budget, dtype=jnp.int32)
+    owner = jnp.searchsorted(cum, e, side="right").astype(jnp.int32)
+    owner_c = jnp.minimum(owner, k - 1)
+    start = cum[owner_c] - deg[owner_c]
+    child = sample[owner_c]
+    eidx = g.in_indptr[child] + (e - start)
+    valid = (e < total) & (e < jnp.int32(budget))
+    parent = g.in_indices[jnp.where(valid, eidx, 0)]
+    ok_e = valid[:, None] & (value[parent] == value[child] - 1)
+    ok = jnp.zeros((k + 1, value.shape[1]), jnp.bool_)
+    ok = ok.at[jnp.where(valid, owner_c, k)].max(ok_e, mode="drop")[:-1]
+    vals = value[sample]                              # [K, B]
+    need = (vals > 0) & (vals < INF)
+    return jnp.stack([jnp.sum(need & ~ok, dtype=jnp.int32),
+                      jnp.asarray(total > budget, jnp.int32)])
+
+
+def _xor_plane_bit(words, vertex: int, plane: int):
+    """Flip one bit of one packed plane word (the chaos layer's HBM
+    bit-flip analogue; see ``repro.ft.FaultyEngine``).  XOR, not OR: a
+    flip of a set bit suppresses a discovery rather than conjuring one."""
+    word, bit = divmod(int(plane), bitmap.WORD_BITS)
+    return words.at[int(vertex), word].set(
+        words[int(vertex), word] ^ jnp.uint32(1 << bit))
+
+
+@partial(jax.jit, static_argnames=("program", "check"))
+def vp_init_state(g: LocalGraph, roots: jax.Array, program: VertexProgram,
+                  check: bool = False):
     frontier, seen, value = program.init(g, roots)
+    chk = (_integrity_chk(frontier, seen, roots.shape[0]) if check
+           else None)
     return (frontier, seen, value,
-            _vp_statvec(g, frontier, seen, 0, 0, roots.shape[0]))
+            _vp_statvec(g, frontier, seen, 0, 0, roots.shape[0], chk))
 
 
 @partial(jax.jit, static_argnames=("program", "budget", "use_pallas",
-                                   "tile_rows"))
+                                   "tile_rows", "check"))
 def vp_push_step(g: LocalGraph, frontier_w, seen_w, value, lvl,
                  program: VertexProgram, budget: int,
-                 use_pallas: bool = False, tile_rows: int | None = None):
+                 use_pallas: bool = False, tile_rows: int | None = None,
+                 check: bool = False):
     """Batched push on packed words: expand out-lists of any-plane
     frontier vertices; each budgeted edge carries its endpoint's packed
     plane word straight into the candidate planes (fused P2->P3)."""
+    # the integrity residue is computed from the step's INPUT state: it
+    # rides the output statvec but indicts the words the step consumed
+    chk = (_integrity_chk(frontier_w, seen_w, value.shape[1]) if check
+           else None)
     any_f = bitmap.any_rows(frontier_w)
     active, _ = compact_indices(any_f, g.n_pad)
     src, nbr, valid, total = expand_edges(active, g.out_indptr,
@@ -303,15 +411,16 @@ def vp_push_step(g: LocalGraph, frontier_w, seen_w, value, lvl,
     new, seen2 = _propagate_edges(g, frontier_w, seen_w, src, nbr, valid,
                                   use_pallas, program.combine, tile_rows)
     value2, statvec = _vp_commit(g, program, new, seen2, value, lvl, total,
-                                 total > budget)
+                                 total > budget, chk)
     return new, seen2, value2, statvec
 
 
 @partial(jax.jit, static_argnames=("program", "budget", "use_pallas",
-                                   "tile_rows"))
+                                   "tile_rows", "check"))
 def vp_pull_step(g: LocalGraph, frontier_w, seen_w, value, lvl,
                  program: VertexProgram, budget: int = 0,
-                 use_pallas: bool = False, tile_rows: int | None = None):
+                 use_pallas: bool = False, tile_rows: int | None = None,
+                 check: bool = False):
     """Batched pull on packed words.
 
     Default path (``budget == 0``): dense segmented OR-scan over the whole
@@ -320,6 +429,8 @@ def vp_pull_step(g: LocalGraph, frontier_w, seen_w, value, lvl,
     (``_propagate_pull_sparse``), which the driver uses on tail levels
     where m_u << E.  Pallas path: budgeted expansion through the fused
     propagate kernel."""
+    chk = (_integrity_chk(frontier_w, seen_w, value.shape[1]) if check
+           else None)
     if use_pallas:
         un_any = bitmap.any_rows(
             ~seen_w & bitmap.plane_mask(value.shape[1]))
@@ -341,7 +452,7 @@ def vp_pull_step(g: LocalGraph, frontier_w, seen_w, value, lvl,
         total = jnp.int32(g.in_indices.shape[0])
         overflow = jnp.int32(0)
     value2, statvec = _vp_commit(g, program, new, seen2, value, lvl, total,
-                                 overflow)
+                                 overflow, chk)
     return new, seen2, value2, statvec
 
 
@@ -439,12 +550,30 @@ class VertexProgramRunner:
                  sched: SchedulerConfig | None = None,
                  init_budget: int = 1 << 15, use_pallas: bool = False,
                  max_overflow_retries: int | None = None,
-                 tile_rows: int | None = None, sparse_pull: bool = False):
+                 tile_rows: int | None = None, sparse_pull: bool = False,
+                 integrity: str = "off", witness_k: int = 64,
+                 witness_budget: int = 4096,
+                 integrity_seed: int | None = 0):
+        if integrity not in INTEGRITY_MODES:
+            raise ValueError(f"integrity must be one of {INTEGRITY_MODES}, "
+                             f"got {integrity!r}")
         self.g = g
         self.program = program if program is not None else type(self).program
         self.sched = sched or SchedulerConfig()
         self.init_budget = init_budget
         self.use_pallas = use_pallas
+        # per-wave integrity validation (see INTEGRITY_MODES).  Mutable
+        # between waves: the serving supervisor flips it on the engine it
+        # wraps.  "audit"'s differential re-run lives in the supervisor;
+        # at engine level it behaves like "witness".
+        self.integrity = integrity
+        self.witness_k = witness_k
+        self.witness_budget = witness_budget
+        self._witness_rng = np.random.default_rng(integrity_seed)
+        # exact-once plane corruption hook: (level, vertex, plane) set by
+        # the chaos layer (repro.ft.FaultyEngine) to XOR one frontier bit
+        # right before that level's step; consumed (or cleared) per run
+        self._corrupt_plane: tuple[int, int, int] | None = None
         # Pallas propagate variant: None = auto by plane-array footprint
         # (kernels.ops.propagate_plan), 0 = force whole-VMEM, > 0 = force
         # row tiles of that many vertices
@@ -481,6 +610,55 @@ class VertexProgramRunner:
         """One blocking device->host round trip for two device values."""
         self._transfers += 1
         return jax.device_get((a, b))
+
+    def _fetch_many(self, *vals):
+        """One blocking device->host round trip for N device values (the
+        final fetch grows a witness verdict without a second sync)."""
+        self._transfers += 1
+        return jax.device_get(vals)
+
+    # -- integrity guards (active when ``integrity != "off"``) ------------
+    def _guard_sv(self, sv: np.ndarray, lvl: int, nb: int,
+                  discovered: int) -> None:
+        """Host-side checks on the just-fetched statvec: the device-side
+        residue slot, frontier-count/popcount agreement, discovery-total
+        bound and loop-termination bound.  Raises IntegrityError."""
+        if int(sv[SV_CHECK]) != 0:
+            raise IntegrityError(
+                f"plane-word invariant violated at level {lvl}: "
+                f"{int(sv[SV_CHECK])} corrupt frontier/seen/pad bits "
+                "(frontier ⊄ seen or dirty pad bits)")
+        if (int(sv[SV_NF]) > 0) != (int(sv[SV_COUNT]) > 0):
+            raise IntegrityError(
+                f"statvec inconsistent at level {lvl}: frontier rows "
+                f"{int(sv[SV_NF])} vs discovery popcount "
+                f"{int(sv[SV_COUNT])}")
+        if discovered + int(sv[SV_COUNT]) > self.g.n * nb:
+            raise IntegrityError(
+                f"cumulative discoveries {discovered + int(sv[SV_COUNT])} "
+                f"exceed |V| x planes = {self.g.n * nb} at level {lvl} "
+                "(each (vertex, plane) pair can be discovered once)")
+        if lvl > self.g.n:
+            raise IntegrityError(
+                f"nonterminating traversal: level {lvl} exceeds |V| = "
+                f"{self.g.n} (discovery popcounts must drain within n "
+                "levels)")
+
+    def _guard_rows(self, rows: np.ndarray, roots: np.ndarray,
+                    iters: int) -> None:
+        """Final value rows must be 0 at each plane's own root and either
+        INF or bounded by the iteration count everywhere else."""
+        bad = (rows != int(INF)) & ((rows < 0) | (rows > iters))
+        if bad.any():
+            v = int(np.argwhere(bad)[0][1])
+            raise IntegrityError(
+                f"{int(bad.sum())} result values outside "
+                f"[0, {iters}] ∪ {{INF}} (first at vertex {v})")
+        at_root = rows[np.arange(roots.size), roots]
+        if np.any(at_root != 0):
+            raise IntegrityError(
+                f"{int(np.sum(at_root != 0))} planes lost their root "
+                "(value at own root != 0)")
 
     def _pull_budget(self, m_u: int) -> int:
         """Sparse-pull budget for this level, or 0 to keep the dense scan.
@@ -522,10 +700,17 @@ class VertexProgramRunner:
                     ) -> VertexProgramResult:
         g, program = self.g, self.program
         b = int(roots.size)
+        check = self.integrity != "off"
+        witness = self.integrity in ("witness", "audit")
+        corrupt, self._corrupt_plane = self._corrupt_plane, None
+        pcs: list[int] = []         # per-level discovery popcounts
         t0 = time.perf_counter()
         frontier, seen, value, statvec = vp_init_state(
-            g, jnp.asarray(roots), program)
+            g, jnp.asarray(roots), program, check=check)
         sv = self._fetch(statvec)
+        if check:
+            self._guard_sv(sv, 0, b, 0)
+        pcs.append(int(sv[SV_COUNT]))
         mode = PUSH
         lvl = 0
         inspected = 0
@@ -555,13 +740,19 @@ class VertexProgramRunner:
                 # levels shrink, so the pull budget must shrink with them
                 step_budget = self._pull_budget(int(sv[SV_MU]))
             step = vp_push_step if mode == PUSH else vp_pull_step
+            if corrupt is not None and lvl == int(corrupt[0]):
+                # chaos hook: flip one frontier plane bit, exact-once
+                frontier = _xor_plane_bit(frontier, corrupt[1], corrupt[2])
+                corrupt = None
             # retry from the PRE-step seen: an overflowed (truncated) step
             # may have committed a partial discovery set
             state0 = (frontier, seen, value)
             frontier, seen, value, statvec = step(
                 g, *state0, np.int32(lvl), program, step_budget,
-                self.use_pallas, self.tile_rows)
+                self.use_pallas, self.tile_rows, check=check)
             sv = self._fetch(statvec)
+            if check:
+                self._guard_sv(sv, lvl, b, sum(pcs))
             while step_budget and bool(sv[SV_OVERFLOW]):
                 overflow_retries += 1   # surfaced in last_stats / result
                 if (self.max_overflow_retries is not None
@@ -573,8 +764,11 @@ class VertexProgramRunner:
                     budget = step_budget
                 frontier, seen, value, statvec = step(
                     g, *state0, np.int32(lvl), program, step_budget,
-                    self.use_pallas, self.tile_rows)
+                    self.use_pallas, self.tile_rows, check=check)
                 sv = self._fetch(statvec)
+                if check:
+                    self._guard_sv(sv, lvl, b, sum(pcs))
+            pcs.append(int(sv[SV_COUNT]))
             lvl += 1
             inspected += int(sv[SV_TOTAL])
             if mode == PUSH:
@@ -587,13 +781,39 @@ class VertexProgramRunner:
         # with the value rows in ONE blocking transfer (host_transfers
         # stays iterations + 2).  Each plane's count is <= E so int32 is
         # safe; the cross-plane sum happens on host in int64.  The numpy
-        # recount this replaces cost tens of ms per wide wave.
-        rows_cm, trav_np = self._fetch_pair(value[: g.n],
-                                            _plane_traversed(g, value))
+        # recount this replaces cost tens of ms per wide wave.  With the
+        # witness audit on, its int32[2] verdict rides the SAME fetch.
+        wit = None
+        if witness:
+            k = min(self.witness_k, g.n)
+            sample = jnp.asarray(
+                self._witness_rng.integers(0, g.n, size=k), jnp.int32)
+            rows_cm, trav_np, wit = self._fetch_many(
+                value[: g.n], _plane_traversed(g, value),
+                _witness_check(g, value, sample, self.witness_budget))
+        else:
+            rows_cm, trav_np = self._fetch_pair(value[: g.n],
+                                                _plane_traversed(g, value))
         rows = rows_cm.T                             # [B, n]
-        return self._result(rows, b, lvl, inspected, push_iters,
-                            pull_iters, dt, overflow_retries, budget,
-                            trav_vec=trav_np)
+        if check:
+            self._guard_rows(rows, roots, lvl)
+            if wit is not None and not int(wit[1]) and int(wit[0]):
+                raise IntegrityError(
+                    f"witness audit failed: {int(wit[0])} sampled "
+                    "(vertex, plane) discoveries have no in-neighbor at "
+                    "value - 1")
+        res = self._result(rows, b, lvl, inspected, push_iters,
+                           pull_iters, dt, overflow_retries, budget,
+                           trav_vec=trav_np)
+        self.last_stats["discovery_popcounts"] = pcs
+        if check:
+            self.last_stats["integrity"] = dict(
+                mode=self.integrity,
+                sv_checks=len(pcs),
+                witness_sampled=(0 if wit is None
+                                 else min(self.witness_k, g.n)),
+                witness_truncated=bool(wit is not None and int(wit[1])))
+        return res
 
     def _result(self, rows, b, lvl, inspected, push_iters, pull_iters,
                 dt, overflow_retries: int = 0, budget: int = 0,
@@ -709,12 +929,20 @@ class MultiSourceBFSRunner(VertexProgramRunner):
                  init_budget: int = 1 << 15, use_pallas: bool = False,
                  packed: bool = True,
                  max_overflow_retries: int | None = None,
-                 tile_rows: int | None = None, sparse_pull: bool = False):
+                 tile_rows: int | None = None, sparse_pull: bool = False,
+                 integrity: str = "off", witness_k: int = 64,
+                 witness_budget: int = 4096,
+                 integrity_seed: int | None = 0):
         super().__init__(g, BFS, sched, init_budget, use_pallas,
-                         max_overflow_retries, tile_rows, sparse_pull)
+                         max_overflow_retries, tile_rows, sparse_pull,
+                         integrity, witness_k, witness_budget,
+                         integrity_seed)
         self.packed = packed
 
     def run(self, roots, *, budget: int | None = None) -> VertexProgramResult:
+        # NOTE: the bool-plane baseline performs no integrity checks — it
+        # IS the reference the supervisor's differential audit compares
+        # against, and the demotion ladder's last rung
         if self.packed:
             return super().run(roots, budget=budget)
         roots = validate_roots(np.asarray(roots), self.g.n).astype(np.int32)

@@ -1,12 +1,16 @@
 """Fault tolerance: live serving policies + deterministic chaos harness.
 
 ``failures`` holds the primitives (injection schedules, retry-from-
-checkpoint, straggler timing); ``supervisor`` wires them around the
-serving engine as the :class:`EngineSupervisor` wave policy the dynamic
-batcher delegates to.
+checkpoint, straggler timing); ``integrity`` the answer-validation layer
+(detect wrong answers, don't serve them); ``supervisor`` wires both
+around the serving engine as the :class:`EngineSupervisor` wave policy
+the dynamic batcher delegates to.
 """
 from repro.ft.failures import (FailureInjector, InjectedFailure, StepTimer,
                                run_with_retries)
+from repro.ft.integrity import (INTEGRITY_MODES, IntegrityConfig,
+                                IntegrityError, check_level_rows,
+                                check_popcount_sequence)
 from repro.ft.supervisor import (DETERMINISTIC, FAULT_KINDS, TRANSIENT,
                                  EngineSupervisor, FaultPlan, FaultyEngine,
                                  KernelFault, PoisonedRoot,
@@ -24,4 +28,6 @@ __all__ = [
     "RequestQuarantined", "PoisonedRoot",
     "TRANSIENT", "DETERMINISTIC", "classify_fault", "is_kernel_fault",
     "find_tunable_engine", "supports_budget_override",
+    "INTEGRITY_MODES", "IntegrityConfig", "IntegrityError",
+    "check_level_rows", "check_popcount_sequence",
 ]

@@ -52,8 +52,10 @@ import numpy as np
 
 from repro.core import bitmap
 from repro.core.bfs_local import engine_num_vertices
-from repro.core.vertex_program import BudgetOverflowError
+from repro.core.vertex_program import BudgetOverflowError, IntegrityError
 from repro.ft.failures import InjectedFailure, StepTimer
+from repro.ft.integrity import (IntegrityConfig, check_level_rows,
+                                check_popcount_sequence)
 
 # ---------------------------------------------------------------------------
 # Typed error taxonomy
@@ -118,6 +120,11 @@ def is_kernel_fault(exc: BaseException) -> bool:
     and XLA compiler/runtime fingerprints.
     """
     if isinstance(exc, KernelFault):
+        return True
+    if isinstance(exc, IntegrityError):
+        # a violated traversal invariant means the engine computed WRONG
+        # words — a corrupted kernel rung is the prime suspect, so the
+        # retry should walk the same pallas -> jnp -> bool-plane ladder
         return True
     if isinstance(exc, _DETERMINISTIC_TYPES):
         return False
@@ -242,17 +249,32 @@ class EngineSupervisor:
         previous wave settled on (both via ``run_batch(budget=)``).
     pad_to_plane: pad every engine call to whole uint32 plane words so
         bisection sub-waves reuse the jitted wave shapes.
+    integrity: an :class:`~repro.ft.integrity.IntegrityConfig` (or a mode
+        string) enabling per-wave answer validation: engine-side statvec
+        invariants + witness reduction (pushed onto the tunable runner's
+        knobs), host-side row/popcount checks on every served wave, and —
+        mode ``audit`` — a rate-sampled full differential re-run against
+        the reference path.  Violations raise
+        :class:`~repro.core.IntegrityError` inside the attempt, riding
+        the normal retry/demotion policy.  None = off.
+    jitter: decorrelate retry backoff (``delay = uniform(backoff,
+        3 x delay)``, capped) so pool workers sharing a fault do not
+        retry in lockstep; ``jitter_seed=None`` (default) seeds from OS
+        entropy, so two supervisors' schedules diverge.
     timer / clock / sleep: injectable for deterministic tests.
     """
 
     def __init__(self, engine, *, max_retries: int = 2,
                  backoff: float = 0.02, backoff_factor: float = 2.0,
+                 backoff_cap: float = 2.0,
                  wave_deadline: float | None = None,
                  min_deadline: float = 0.25, max_deadline: float = 60.0,
                  watchdog: bool = True, degrade: bool = True,
                  sticky_demotions: bool = False,
                  demotion_slack: float = 4.0,
                  escalate_budget: bool = True, pad_to_plane: bool = True,
+                 integrity: IntegrityConfig | str | None = None,
+                 jitter: bool = True, jitter_seed: int | None = None,
                  timer: StepTimer | None = None, clock=None, sleep=None):
         if max_retries < 0 or backoff < 0 or backoff_factor < 1:
             raise ValueError("need max_retries >= 0, backoff >= 0, "
@@ -261,6 +283,12 @@ class EngineSupervisor:
         self.max_retries = int(max_retries)
         self.backoff = float(backoff)
         self.backoff_factor = float(backoff_factor)
+        self.backoff_cap = float(backoff_cap)
+        self.jitter = bool(jitter)
+        self._retry_rng = np.random.default_rng(jitter_seed)
+        # delays actually waited, in order (the jitter-divergence test's
+        # observable: two default-seeded supervisors must NOT share it)
+        self.backoff_log: list[float] = []
         self.wave_deadline = wave_deadline
         self.min_deadline = float(min_deadline)
         self.max_deadline = float(max_deadline)
@@ -276,6 +304,15 @@ class EngineSupervisor:
         self.sleep = time.sleep if sleep is None else sleep
         self._supports_budget = supports_budget_override(engine)
         self._tunable = find_tunable_engine(engine)
+        if isinstance(integrity, str):
+            integrity = IntegrityConfig(mode=integrity)
+        self.integrity = integrity
+        self._audit_rng = np.random.default_rng(
+            None if integrity is None else integrity.seed)
+        self._n_integrity_checks = self._n_integrity_violations = 0
+        self._n_audits = self._n_audit_failures = 0
+        if integrity is not None and integrity.mode != "off":
+            self._push_integrity_knobs(integrity)
         self._budget_hint: int | None = None
         self._zombie: threading.Thread | None = None
         self._wave_deadline_override: float | None = None
@@ -393,6 +430,11 @@ class EngineSupervisor:
             except Exception as exc:      # noqa: BLE001 — policy boundary
                 wave.fault_waves += 1
                 wave.seconds += self._last_attempt_seconds
+                if isinstance(exc, IntegrityError):
+                    # count every violation ONCE at the policy boundary —
+                    # engine-raised (device statvec / witness) and
+                    # host-raised (row bounds / popcounts / audit) alike
+                    self._n_integrity_violations += 1
                 if classify_fault(exc) == DETERMINISTIC:
                     if len(outcomes) == 1:
                         root = outcomes[0].root
@@ -435,8 +477,9 @@ class EngineSupervisor:
                             o.error = err
                     return
                 wave.retries += 1
+                self.backoff_log.append(delay)
                 self._backoff_wait(delay)
-                delay *= self.backoff_factor
+                delay = self._next_delay(delay)
             else:
                 wave.seconds += dt
                 wave.stats = stats
@@ -502,7 +545,96 @@ class EngineSupervisor:
         rows = np.asarray(levels)
         if self.pad_to_plane:
             rows = bitmap.slice_plane_rows(rows, b)
+        # integrity validation happens AFTER timer.record: a failed check
+        # re-enters _serve as a kernel-class fault, and audit re-runs must
+        # not inflate the watchdog's wave-duration history
+        if self.integrity is not None and self.integrity.mode != "off":
+            self._validate_wave(rows, np.asarray(roots), slots, stats,
+                                budget)
         return rows, stats, dt
+
+    def _validate_wave(self, rows: np.ndarray, roots: np.ndarray,
+                       slots: np.ndarray, stats: dict,
+                       budget: int | None) -> None:
+        """Host-side answer validation for one successful attempt; raises
+        :class:`IntegrityError` (kernel-class, so _serve retries/demotes).
+
+        Row bounds + root-zero run on every wave (this is the check that
+        catches RESULT corruption the in-flight statvec slots cannot see);
+        popcount positive-then-terminate runs when the engine recorded the
+        sequence; mode ``audit`` additionally re-runs a sampled fraction
+        of waves through the reference rung (packed off, else pallas off)
+        and compares rows exactly.
+        """
+        self._n_integrity_checks += 1
+        check_level_rows(rows, roots, stats.get("iterations"))
+        pcs = stats.get("discovery_popcounts")
+        if pcs is not None:
+            check_popcount_sequence(pcs)
+        if (self.integrity.mode == "audit"
+                and self._audit_rng.random() < self.integrity.audit_rate):
+            self._differential_audit(rows, slots, budget)
+
+    def _differential_audit(self, rows: np.ndarray, slots: np.ndarray,
+                            budget: int | None) -> None:
+        """Re-run the padded wave through the reference rung and compare.
+
+        Talks to the TUNABLE runner directly (not ``self.engine``): a
+        chaos wrapper in between would advance its fault schedule and
+        could inject into the reference itself.  Knobs are restored even
+        when the audit raises.
+        """
+        t = self._tunable
+        if t is None:
+            return
+        d = getattr(t, "__dict__", {})
+        knob = ("packed" if d.get("packed", False)
+                else "use_pallas" if d.get("use_pallas", False) else None)
+        if knob is None:
+            return            # already ON the reference rung: nothing to diff
+        self._n_audits += 1
+        saved = getattr(t, knob)
+        try:
+            setattr(t, knob, False)
+            ref = np.asarray(self._call_tunable(t, slots, budget))
+            ref = bitmap.slice_plane_rows(ref, rows.shape[0])
+        finally:
+            setattr(t, knob, saved)
+        if not np.array_equal(ref, rows):
+            self._n_audit_failures += 1
+            bad = int(np.sum(np.any(ref != rows, axis=1)))
+            raise IntegrityError(
+                f"differential audit mismatch: {bad}/{rows.shape[0]} "
+                f"planes differ from the {knob}=False reference")
+
+    @staticmethod
+    def _call_tunable(t, slots, budget):
+        if budget is not None and supports_budget_override(t):
+            return t.run_batch(slots, budget=int(budget))
+        return t.run_batch(slots)
+
+    def _push_integrity_knobs(self, cfg: IntegrityConfig) -> None:
+        """Configure ENGINE-side checking on the tunable runner: statvec
+        invariant slot + (witness/audit) the sampled witness reduction.
+        No-op for engines without the knobs (e.g. DistributedBFS) — the
+        host-side checks in :meth:`_validate_wave` still apply."""
+        t = self._tunable
+        if t is None or "integrity" not in getattr(t, "__dict__", {}):
+            return
+        t.integrity = cfg.mode
+        t.witness_k = cfg.witness_k
+        t.witness_budget = cfg.witness_budget
+
+    def _next_delay(self, delay: float) -> float:
+        """Next retry delay: plain exponential when ``jitter=False``,
+        decorrelated jitter (``uniform(backoff, 3 x delay)``, capped at
+        ``backoff_cap``) otherwise — correlated faults across pool
+        workers then spread their retries instead of re-colliding."""
+        if not self.jitter:
+            return delay * self.backoff_factor
+        hi = max(3.0 * delay, self.backoff)
+        return min(self.backoff_cap,
+                   float(self._retry_rng.uniform(self.backoff, hi)))
 
     def _backoff_wait(self, delay: float):
         """Back off before a retry; if a timed-out wave's guard thread is
@@ -563,6 +695,13 @@ class EngineSupervisor:
             out["wave_deadline"] = round(float(dl), 4)
         if self._budget_hint is not None:
             out["budget_hint"] = int(self._budget_hint)
+        if self.integrity is not None:
+            out["integrity"] = dict(
+                mode=self.integrity.mode,
+                checks=self._n_integrity_checks,
+                violations=self._n_integrity_violations,
+                audits=self._n_audits,
+                audit_failures=self._n_audit_failures)
         return out
 
 
@@ -570,7 +709,7 @@ class EngineSupervisor:
 # Deterministic chaos harness
 # ---------------------------------------------------------------------------
 
-FAULT_KINDS = ("kernel", "runtime", "stuck")
+FAULT_KINDS = ("kernel", "runtime", "stuck", "plane_flip", "result_flip")
 
 
 class FaultPlan:
@@ -630,7 +769,17 @@ class FaultyEngine:
     * ``break_pallas=True`` — raises :class:`KernelFault` whenever the
       underlying engine still has ``use_pallas`` enabled, emulating a
       broken kernel toolchain until the ladder demotes to the jnp
-      fallback.
+      fallback;
+    * bit-flip corruption (SILENT faults — nothing raises; only the
+      integrity layer can catch them): ``plane_flip`` arms the runner's
+      exact-once ``_corrupt_plane`` hook, XOR-ing one frontier plane bit
+      mid-traversal at (level, vertex, plane) — ``plane_flip=`` pins the
+      target, otherwise it derives deterministically from the call index;
+      ``result_flip`` XORs one bit of the RETURNED level rows at
+      (row, vertex, bit) after the inner engine finished (``result_flip=``
+      pins it; bit defaults to 16 so any level or INF lands outside the
+      valid range and the row-bounds check must fire).  Every flip is
+      recorded in ``self.flips``.
 
     The inner engine is called under a lock so a timed-out (zombie) wave
     finishing late never overlaps a retry's traversal.
@@ -638,12 +787,18 @@ class FaultyEngine:
 
     def __init__(self, inner, plan: FaultPlan | None = None, *,
                  poisoned_roots=(), stall_seconds: float = 0.25,
-                 break_pallas: bool = False, sleep=None):
+                 break_pallas: bool = False,
+                 plane_flip: tuple[int, int, int] | None = None,
+                 result_flip: tuple[int, int, int] | None = None,
+                 sleep=None):
         self.inner = inner
         self.plan = plan if plan is not None else FaultPlan()
         self.poisoned = {int(r) for r in poisoned_roots}
         self.stall_seconds = float(stall_seconds)
         self.break_pallas = bool(break_pallas)
+        self.plane_flip = plane_flip
+        self.result_flip = result_flip
+        self.flips: list[dict] = []
         self.sleep = time.sleep if sleep is None else sleep
         self.calls = 0
         self._lock = threading.Lock()
@@ -680,7 +835,33 @@ class FaultyEngine:
             raise InjectedFailure(f"injected runtime fault at wave {idx}")
         if kind == "stuck":
             self.sleep(self.stall_seconds)
+        if kind == "plane_flip":
+            spec = self.plane_flip or (
+                1 + idx % 2,
+                (1103515245 * idx + 7) % max(1, self.num_vertices or 1),
+                idx % max(1, len(np.asarray(roots))))
+            if tunable is not None and hasattr(tunable, "_corrupt_plane"):
+                tunable._corrupt_plane = tuple(int(x) for x in spec)
+                self.flips.append(dict(wave=idx, kind=kind,
+                                       target=list(spec)))
         with self._lock:
             if budget is not None and self._supports_budget:
-                return self.inner.run_batch(roots, budget=budget)
-            return self.inner.run_batch(roots)
+                rows = self.inner.run_batch(roots, budget=budget)
+            else:
+                rows = self.inner.run_batch(roots)
+        if tunable is not None and getattr(tunable, "_corrupt_plane",
+                                           None) is not None:
+            # the target level was never reached (or the engine is not a
+            # packed runner): disarm so the flip cannot leak into a later,
+            # unscheduled wave
+            tunable._corrupt_plane = None
+        if kind == "result_flip":
+            rows = np.array(rows)            # corrupt a COPY, post-engine
+            r, v, bit = self.result_flip or (
+                idx % rows.shape[0],
+                (1103515245 * idx + 13) % rows.shape[1], 16)
+            rows[int(r) % rows.shape[0],
+                 int(v) % rows.shape[1]] ^= np.int32(1 << int(bit))
+            self.flips.append(dict(wave=idx, kind=kind,
+                                   target=[int(r), int(v), int(bit)]))
+        return rows

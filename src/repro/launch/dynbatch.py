@@ -36,6 +36,11 @@ the ~21x batch-32 win.  This module closes that gap (the ROADMAP's
 * Backpressure: the request queue is bounded (``max_pending``); ``submit``
   blocks (threaded mode) or raises ``QueueFull``.  ``close(drain=True)``
   flushes every pending request into final waves before shutting down.
+* Admission control (``shed=True``): a deadline request whose estimated
+  queue delay (EWMA wave service x waves of backlog ahead) already
+  exceeds its SLO is refused synchronously with a typed ``Overloaded`` —
+  it fails in well under one wave time instead of burning engine time on
+  a guaranteed miss and dragging every queued request later.
 * Fault tolerance: hand the batcher an ``repro.ft.EngineSupervisor``
   (wrapping the real engine) and the worker loop delegates its WHOLE
   failure policy to it — watchdog deadlines, typed retry with backoff,
@@ -77,6 +82,15 @@ class QueueFull(RuntimeError):
 
 class BatcherClosed(RuntimeError):
     """submit() after close() began, or result() of a cancelled request."""
+
+
+class Overloaded(RuntimeError):
+    """Admission control shed this request: the estimated queue delay
+    (EWMA wave service time x waves of backlog ahead) already exceeds the
+    request's deadline, so serving it would burn engine time on a
+    guaranteed SLO miss.  Raised synchronously by ``submit`` — a shed
+    request fails in well under one wave service time, leaving the engine
+    to the requests that can still make their deadlines."""
 
 
 @dataclasses.dataclass
@@ -231,13 +245,29 @@ class DynamicBatcher:
                  max_pending: int = 1024, clock=None,
                  pad_to_plane: bool = True, start: bool | None = None,
                  stats_history: int = 4096, pipeline: bool = False,
-                 pipeline_depth: int = 2, slo_margin: float | None = None):
+                 pipeline_depth: int = 2, slo_margin: float | None = None,
+                 shed: bool = False, service_hint: float | None = None,
+                 failure_handler=None):
         if max_batch < 1 or max_pending < 1 or window < 0:
             raise ValueError("need max_batch >= 1, max_pending >= 1, "
                              "window >= 0")
         if pipeline_depth < 1:
             raise ValueError("need pipeline_depth >= 1")
+        if service_hint is not None and service_hint < 0:
+            raise ValueError(f"service_hint must be >= 0, got {service_hint}")
         self.engine = engine
+        # admission control: shed=True makes submit() raise Overloaded when
+        # the estimated queue delay already exceeds the request's deadline.
+        # service_hint primes the EWMA service estimate so the very first
+        # waves aren't admitted blind (the estimate is 0 until a wave ran).
+        self.shed = bool(shed)
+        # pool hook: failure_handler(future, exc) -> bool runs for each
+        # future about to FAIL with an engine-side error.  Returning True
+        # hands ownership of the future to the handler (the pool
+        # redispatches it to a surviving worker); this batcher then skips
+        # its resolution and latency/SLO booking — the worker that finally
+        # resolves it books the full submit->resolve latency.
+        self.failure_handler = failure_handler
         # an EngineSupervisor engine moves the whole failure policy (typed
         # retries, watchdog, bisection, degradation) out of this worker
         # loop: _dispatch delegates to supervisor.run_wave per-request
@@ -271,7 +301,14 @@ class DynamicBatcher:
         self._busy_seconds = 0.0          # engine-occupied (incl. failures)
         self._idle_seconds = 0.0          # engine gaps between waves
         self._last_exec_end: float | None = None
-        self._service_est = 0.0           # EWMA wave service (injected clk)
+        # EWMA wave service (injected clock); primed by service_hint
+        self._service_est = float(service_hint or 0.0)
+        self._service_primed = service_hint is not None
+        self._n_shed = 0                  # requests refused by admission
+        # consecutive waves that failed for ENGINE reasons (quarantine-only
+        # waves don't count: poisoned input, healthy engine).  The pool's
+        # health state machine reads this to drive SUSPECT/EVICTED.
+        self.consecutive_failures = 0
         self._traversed = 0
         self._inflight = 0                # cut but not yet finished
         self._seq = 0
@@ -339,6 +376,15 @@ class DynamicBatcher:
         with self._cond:
             if self._closed:
                 raise BatcherClosed("submit() on a closed DynamicBatcher")
+            if (self.shed and deadline is not None
+                    and self._estimated_delay_locked() > deadline):
+                self._n_shed += 1
+                raise Overloaded(
+                    f"estimated queue delay "
+                    f"{self._estimated_delay_locked():.4f}s exceeds the "
+                    f"request deadline {deadline:.4f}s "
+                    f"(backlog={len(self._pending) + self._inflight}, "
+                    f"service_est={self._service_est:.4f}s)")
             # backpressure: blocking waits only help when a worker thread
             # is draining the queue concurrently.  The timeout runs on the
             # INJECTED clock — a fake-clock batcher with start=True times
@@ -371,6 +417,58 @@ class DynamicBatcher:
                 self._n_slo_pending += 1
             self._cond.notify_all()
         return fut
+
+    def _estimated_delay_locked(self) -> float:
+        """Expected submit->resolve delay for a request admitted NOW:
+        EWMA wave service time x (this wave + the waves of backlog queued
+        ahead of it).  0 until a wave has run (or ``service_hint`` primed
+        the estimate) — admission control never rejects blind."""
+        backlog = len(self._pending) + self._inflight
+        return self._service_est * (1.0 + backlog / self.max_batch)
+
+    def estimated_delay(self) -> float:
+        """Thread-safe :meth:`_estimated_delay_locked` (pool routing)."""
+        with self._cond:
+            return self._estimated_delay_locked()
+
+    def _submit_future(self, fut: BFSFuture) -> None:
+        """Enqueue an EXISTING future (pool redispatch after an eviction).
+
+        Preserves the future's original ``t_submit`` / deadline / priority
+        so its eventual latency and SLO verdict span the whole journey,
+        not just the surviving worker's share.  Non-blocking: raises
+        ``BatcherClosed`` / ``QueueFull`` so the caller can try the next
+        worker instead of deadlocking inside a finisher thread.
+        """
+        with self._cond:
+            if self._closed:
+                raise BatcherClosed(
+                    "redispatch onto a closed DynamicBatcher")
+            if len(self._pending) >= self.max_pending:
+                raise QueueFull(
+                    f"{len(self._pending)} requests pending "
+                    f"(max_pending={self.max_pending})")
+            fut._seq = self._seq
+            self._seq += 1
+            self._pending.append(fut)
+            if fut.t_deadline is not None or fut.priority != 0:
+                self._n_slo_pending += 1
+            self._cond.notify_all()
+
+    def cancel_pending(self) -> list[BFSFuture]:
+        """Pop every queued (not yet cut) request WITHOUT resolving it.
+
+        Eviction support: the pool drains a failing worker's queue and
+        redispatches the futures to survivors.  The caller owns the
+        returned futures — anything it cannot place must be failed
+        explicitly or clients hang.
+        """
+        with self._cond:
+            out = list(self._pending)
+            self._pending.clear()
+            self._n_slo_pending = 0
+            self._cond.notify_all()    # free queue capacity for waiters
+        return out
 
     def __enter__(self):
         return self
@@ -648,27 +746,51 @@ class DynamicBatcher:
                 first = ws
         return first
 
+    def _health_event(self, failed: bool):
+        """One wave's verdict for the health state machine: engine-failure
+        waves increment ``consecutive_failures``, healthy waves reset it."""
+        with self._cond:
+            self.consecutive_failures = (
+                self.consecutive_failures + 1 if failed else 0)
+
+    def _offer_failure(self, fut: BFSFuture, exc: BaseException) -> bool:
+        """Ask the pool's failure handler to take over a failing future.
+        A handler exception must not kill the finisher: treat it as
+        'declined' and fail the future normally."""
+        if self.failure_handler is None:
+            return False
+        try:
+            return bool(self.failure_handler(fut, exc))
+        except Exception:
+            return False
+
     def _finish_one(self, ex: _Executed) -> WaveStats:
         prep, ws = ex.prep, ex.prep.ws
         futures = prep.futures
         if ex.wave is not None:
             return self._finish_supervised(ex)
         if ex.exc is not None:
+            self._health_event(True)
             ws.error = f"{type(ex.exc).__name__}: {ex.exc}"
             if ex.futures_owned_elsewhere:
                 # the singleton re-dispatches resolve (and account) the
                 # futures; this record only books the failed parent wave
                 self._record(ws)
                 return ws
+            kept = [f for f in futures
+                    if not self._offer_failure(f, ex.exc)]
             # failed futures still resolved: their submit->fail latency
             # belongs in the percentile base (an SLO-blind p99 that
-            # excludes precisely the slow failures is how misses hide)
+            # excludes precisely the slow failures is how misses hide).
+            # Handed-off futures are NOT resolved here — their eventual
+            # worker books them — but they left this worker's in-flight.
             t_res = self.clock()
-            lats = [t_res - f.t_submit for f in futures]
+            lats = [t_res - f.t_submit for f in kept]
             ws.latencies.extend(lats)
-            self._book_slo(ws, futures, t_res, all_failed=True)
+            ws.failed = len(kept)
+            self._book_slo(ws, kept, t_res, all_failed=True)
             self._record(ws)
-            for f, lat in zip(futures, lats):
+            for f, lat in zip(kept, lats):
                 f.wave = ws
                 f.latency = lat
                 f.slo_miss = (None if f.t_deadline is None
@@ -676,6 +798,7 @@ class DynamicBatcher:
                 f._fail(ex.exc)
             self._dec_inflight(len(futures))
             return ws
+        self._health_event(False)
         levels = bitmap.slice_plane_rows(ex.levels, prep.b)
         if ws.traversed_edges is None and self.out_deg is not None:
             # engines without per-plane counts: recount over the REAL
@@ -714,28 +837,40 @@ class DynamicBatcher:
         ws.edges_inspected = int(st.get("edges_inspected", 0))
         ws.push_iters = int(st.get("push_iters", 0))
         ws.pull_iters = int(st.get("pull_iters", 0))
-        ws.failed = wave.n_failed
         ws.traversals = wave.traversals
         ws.retries = wave.retries
         ws.timeouts = wave.timeouts
         ws.quarantined = list(wave.quarantined)
         ws.demotions = list(wave.demotions)
-        if ws.failed == len(futures):
+        if wave.n_failed == len(futures):
             first = next(o.error for o in wave.outcomes
                          if o.error is not None)
             ws.error = f"{type(first).__name__}: {first}"
+        # quarantine-only failures are poisoned INPUT, not a sick engine
+        self._health_event(wave.n_failed > len(wave.quarantined))
+        # offer each failing future to the pool before resolving: a
+        # handed-off future is redispatched to a surviving worker and
+        # books nothing here (the survivor resolves it end-to-end)
+        handed = set()
+        for f, o in zip(futures, wave.outcomes):
+            if not o.ok and self._offer_failure(f, o.error):
+                handed.add(id(f))
+        ws.failed = wave.n_failed - len(handed)
         ok_rows = [o.levels for o in wave.outcomes if o.ok]
         if self.out_deg is not None and ok_rows:
             ws.traversed_edges = count_traversed_edges(
                 self.out_deg, np.stack(ok_rows))
         t_res = self.clock()
-        for f in futures:
+        booked = [f for f in futures if id(f) not in handed]
+        for f in booked:
             ws.latencies.append(t_res - f.t_submit)
-        self._book_slo(ws, futures, t_res,
+        self._book_slo(ws, booked, t_res,
                        failed={id(futures[i]) for i, o in
                                enumerate(wave.outcomes) if not o.ok})
         self._record(ws)
         for f, o in zip(futures, wave.outcomes):
+            if id(f) in handed:
+                continue
             if f.t_deadline is not None:
                 f.slo_miss = (not o.ok) or t_res > f.t_deadline
             if o.ok:
@@ -780,8 +915,10 @@ class DynamicBatcher:
             self._traversed += ws.traversed_edges or 0
             # injected-clock service estimate drives SLO preemption
             dt = max(self.clock() - ws.t_start, 0.0)
-            self._service_est = (dt if self._n_waves == 1
-                                 else 0.7 * self._service_est + 0.3 * dt)
+            if self._n_waves == 1 and not self._service_primed:
+                self._service_est = dt
+            else:
+                self._service_est = 0.7 * self._service_est + 0.3 * dt
             if ws.error is not None:
                 self._n_errors += 1
             else:
@@ -801,6 +938,8 @@ class DynamicBatcher:
             traversed = self._traversed
             n_failed = self._n_failed
             n_slo, n_miss = self._n_slo_requests, self._n_slo_misses
+            n_shed = self._n_shed
+            consec = self.consecutive_failures
         n_ok = n_waves - n_errors
         # EVERY resolved request contributes its latency — including the
         # ones whose wave failed: excluding them made p99 blind to
@@ -816,6 +955,10 @@ class DynamicBatcher:
         )
         if n_failed:
             out["requests_failed"] = n_failed
+        if self.shed or n_shed:
+            out["shed"] = n_shed
+        if consec:
+            out["consecutive_failures"] = consec
         if n_slo:
             out.update(slo_requests=n_slo, slo_misses=n_miss,
                        slo_miss_rate=round(n_miss / n_slo, 4))
@@ -849,7 +992,8 @@ def plane_wave_sizes(max_batch: int) -> list[int]:
 def drive_open_loop(batcher, roots, rate: float | None = None,
                     rng: np.random.Generator | None = None,
                     raise_errors: bool = True,
-                    deadline: float | None = None) -> list[BFSFuture]:
+                    deadline: float | None = None,
+                    allow_shed: bool = False) -> list[BFSFuture]:
     """Submit ``roots`` open-loop, drain the batcher, return the futures.
 
     With ``rate`` (req/s) arrivals follow a Poisson process against an
@@ -860,7 +1004,10 @@ def drive_open_loop(batcher, roots, rate: float | None = None,
     Raises the wave's error if any request failed; ``raise_errors=False``
     (the chaos arms) only asserts every future RESOLVED — with levels or a
     typed error — so injected faults don't abort the run but a hang still
-    surfaces as ``TimeoutError``.
+    surfaces as ``TimeoutError``.  ``allow_shed=True`` (serving with
+    admission control on) treats a typed ``Overloaded`` reject as a
+    normal open-loop outcome: the request is dropped, the stream keeps
+    going, and only ADMITTED requests return futures.
     """
     roots = np.asarray(roots)
     if rate:
@@ -874,7 +1021,11 @@ def drive_open_loop(batcher, roots, rate: float | None = None,
         delay = t_arr - (time.monotonic() - t0)
         if delay > 0:
             time.sleep(delay)
-        futures.append(batcher.submit(int(r), deadline=deadline))
+        try:
+            futures.append(batcher.submit(int(r), deadline=deadline))
+        except Overloaded:
+            if not allow_shed:
+                raise
     batcher.close(drain=True)
     for f in futures:
         if raise_errors:

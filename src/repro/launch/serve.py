@@ -209,7 +209,11 @@ def serve_bfs_async(graph: str, requests: int = 64, window: float = 0.05,
                     slo: float | None = None, sparse_pull: bool = False,
                     ft_max_retries: int | None = None,
                     ft_wave_deadline: float | None = None,
-                    ft_chaos: float | None = None) -> dict:
+                    ft_chaos: float | None = None,
+                    ft_integrity: str | None = None,
+                    ft_audit_rate: float = 0.05,
+                    pool_evict_after: int | None = None,
+                    shed: bool = False) -> dict:
     """Serve a stream of single-root queries through the dynamic batcher.
 
     ``rate`` (req/s) spaces submissions with exponential inter-arrival
@@ -236,6 +240,18 @@ def serve_bfs_async(graph: str, requests: int = 64, window: float = 0.05,
     supervisor, the returned stats carry a ``fault_tolerance`` block and
     failed requests resolve with typed errors instead of raising here.
 
+    Integrity & resilience: ``ft_integrity`` picks the answer-validation
+    tier (``off`` | ``invariants`` | ``witness`` | ``audit``, see
+    ``repro.ft.integrity``; implies supervision), ``ft_audit_rate`` the
+    sampled fraction of clean waves the ``audit`` tier re-runs through
+    the reference path.  ``pool_evict_after`` sets the worker pool's
+    consecutive-failure eviction threshold (``workers > 1``); ``shed``
+    turns on admission control — deadline requests whose estimated queue
+    delay already exceeds their SLO are refused with a typed
+    ``Overloaded`` instead of queued to miss.  The returned stats then
+    carry an ``integrity`` block (checks / violations / audits / sheds /
+    evictions) summed across workers.
+
     Returns the batcher's aggregate stats (waves, mean batch, latency
     p50/p99, aggregate TEPS over busy time) as a JSON-friendly dict.
     """
@@ -257,9 +273,13 @@ def serve_bfs_async(graph: str, requests: int = 64, window: float = 0.05,
     engines = [engine] + [type(engine)(engine.g, sparse_pull=sparse_pull)
                           for _ in range(workers - 1)]
     supervised = (ft_max_retries is not None or ft_wave_deadline is not None
-                  or ft_chaos is not None)
+                  or ft_chaos is not None or ft_integrity is not None)
     if supervised:
-        from repro.ft import EngineSupervisor, FaultPlan, FaultyEngine
+        from repro.ft import (EngineSupervisor, FaultPlan, FaultyEngine,
+                              IntegrityConfig)
+        integrity = (None if ft_integrity is None else
+                     IntegrityConfig(mode=ft_integrity,
+                                     audit_rate=ft_audit_rate))
         wrapped = []
         for i, e in enumerate(engines):
             if ft_chaos:
@@ -271,23 +291,51 @@ def serve_bfs_async(graph: str, requests: int = 64, window: float = 0.05,
             wrapped.append(EngineSupervisor(
                 e,
                 max_retries=2 if ft_max_retries is None else ft_max_retries,
-                wave_deadline=ft_wave_deadline))
+                wave_deadline=ft_wave_deadline,
+                integrity=integrity))
         engines = wrapped
     kw = dict(out_deg=deg, window=window, max_batch=max_batch,
-              pipeline=pipeline)
+              pipeline=pipeline, shed=shed)
     if len(engines) > 1:
         from repro.launch.pool import WorkerPool
+        if pool_evict_after is not None:
+            kw["evict_after"] = pool_evict_after
         batcher = WorkerPool(engines, **kw)
     else:
         batcher = DynamicBatcher(engines[0], **kw)
-    drive_open_loop(batcher, roots, rate=rate, rng=rng,
-                    raise_errors=not supervised, deadline=slo)
-    out = batcher.stats()
+    try:
+        drive_open_loop(batcher, roots, rate=rate, rng=rng,
+                        raise_errors=not supervised, deadline=slo,
+                        allow_shed=shed)
+    finally:
+        out = batcher.stats()
     out.update(graph=graph, algo=algo, requests=requests, window=window,
                max_batch=max_batch, rate=rate)
     if slo is not None:
         out["slo"] = slo
+    if supervised or shed:
+        out["integrity"] = _integrity_summary(out)
     return out
+
+
+def _integrity_summary(stats: dict) -> dict:
+    """One JSON-friendly resilience rollup: integrity detector counters
+    summed across workers plus the pool's shedding/eviction totals."""
+    ft = stats.get("fault_tolerance")
+    blocks = (ft if isinstance(ft, list) else [ft]) if ft else []
+    acc = dict(checks=0, violations=0, audits=0, audit_failures=0)
+    mode = "off"
+    for b in blocks:
+        ig = (b or {}).get("integrity")
+        if not ig:
+            continue
+        mode = ig.get("mode", mode)
+        for k in acc:
+            acc[k] += int(ig.get(k, 0))
+    acc["mode"] = mode
+    acc["sheds"] = int(stats.get("shed", 0))
+    acc["evictions"] = int(stats.get("evictions", 0))
+    return acc
 
 
 def main():
@@ -342,6 +390,23 @@ def main():
     ap.add_argument("--ft-chaos", type=float,
                     help="inject faults at this per-wave rate through the "
                          "deterministic chaos engine (implies supervision)")
+    ap.add_argument("--ft-integrity",
+                    choices=("off", "invariants", "witness", "audit"),
+                    help="traversal-integrity detector tier (implies "
+                         "supervision): statvec invariants, sampled "
+                         "witness audit, or rate-sampled differential "
+                         "audit vs the reference path")
+    ap.add_argument("--ft-audit-rate", type=float, default=0.05,
+                    help="fraction of clean waves the audit tier re-runs "
+                         "through the reference path (default 0.05)")
+    ap.add_argument("--pool-evict-after", type=int,
+                    help="evict a pool worker after this many consecutive "
+                         "engine-failure waves (workers > 1; queued and "
+                         "failing futures redispatch to survivors)")
+    ap.add_argument("--shed", action="store_true",
+                    help="admission control: refuse deadline requests "
+                         "whose estimated queue delay already exceeds "
+                         "their SLO (typed Overloaded, fails fast)")
     args = ap.parse_args()
     algo = args.algo or "bfs"
     if args.algo and not args.bfs_graph:
@@ -359,7 +424,11 @@ def main():
                               sparse_pull=args.bfs_sparse_pull,
                               ft_max_retries=args.ft_max_retries,
                               ft_wave_deadline=args.ft_wave_deadline,
-                              ft_chaos=args.ft_chaos)
+                              ft_chaos=args.ft_chaos,
+                              ft_integrity=args.ft_integrity,
+                              ft_audit_rate=args.ft_audit_rate,
+                              pool_evict_after=args.pool_evict_after,
+                              shed=args.shed)
     elif args.bfs_graph:
         out = serve_bfs(args.bfs_graph, args.bfs_batch)
     elif args.arch:

@@ -123,8 +123,12 @@ def test_chaos_stream_resolves_everything_correctly(served):
     assert len(poison_waves) == 1
     assert poison_waves[0].quarantined == [poison]
     assert poison_waves[0].failed == 1
-    stuck_waves = [w for w in b.waves if w.timeouts]
-    assert len(stuck_waves) == 1 and stuck_waves[0].failed == 0
+    # the stuck wave (last cut) tripped the watchdog and still recovered
+    # every request.  Other waves may record incidental timeouts under
+    # load (see the fault-wave bound comment above) — don't assert they
+    # can't, only that the injected stall was caught and survived.
+    stuck_wave = list(b.waves)[-1]
+    assert stuck_wave.timeouts >= 1 and stuck_wave.failed == 0
 
 
 def test_bisection_bound_on_real_wave(served):

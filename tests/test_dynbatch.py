@@ -15,7 +15,8 @@ from repro.core import (MultiSourceBFSRunner, bfs_oracle, bitmap,
                         build_local_graph, partition_graph)
 from repro.core.bfs_distributed import DistConfig, DistributedBFS
 from repro.graph import csr_from_edges, transpose_csr, uniform_edges
-from repro.launch.dynbatch import (BatcherClosed, DynamicBatcher, QueueFull,
+from repro.launch.dynbatch import (BatcherClosed, DynamicBatcher,
+                                   Overloaded, QueueFull,
                                    engine_num_vertices)
 
 
@@ -768,3 +769,168 @@ def test_pipelined_supervised_chaos_resolves_everything(graph, engine):
                 np.asarray(f.result(timeout=0), np.int64),
                 bfs_oracle(csr, r))
     assert b.stats()["requests_failed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Admission control (shed), health streaks, pool-support plumbing
+# ---------------------------------------------------------------------------
+
+class TimedEngine:
+    """Wraps a runner, charging a fixed fake-clock cost per wave so the
+    batcher's EWMA service estimate is deterministic."""
+
+    def __init__(self, inner, clock, cost=0.2, fails_left=0):
+        self.inner = inner
+        self.clock = clock
+        self.cost = float(cost)
+        self.fails_left = int(fails_left)
+        self.num_vertices = inner.num_vertices
+
+    def run_batch(self, roots, **kw):
+        self.clock.advance(self.cost)
+        if self.fails_left > 0:
+            self.fails_left -= 1
+            raise RuntimeError("injected engine failure")
+        return self.inner.run_batch(roots, **kw)
+
+
+def test_service_hint_primes_estimated_delay(engine):
+    clock = FakeClock()
+    b = DynamicBatcher(engine, window=1.0, max_batch=4, clock=clock,
+                       service_hint=1.0)
+    assert b.estimated_delay() == pytest.approx(1.0)    # idle: one wave
+    b.submit(3, block=False)
+    b.submit(5, block=False)
+    assert b.estimated_delay() == pytest.approx(1.5)    # 1.0 x (1 + 2/4)
+    b.flush()
+    b.close()
+    with pytest.raises(ValueError):
+        DynamicBatcher(engine, clock=FakeClock(), service_hint=-0.5)
+
+
+def test_ewma_tracks_measured_wave_service(graph, engine):
+    clock = FakeClock()
+    timed = TimedEngine(engine, clock, cost=0.2)
+    b = DynamicBatcher(timed, window=1.0, clock=clock)
+    assert b.estimated_delay() == 0.0       # unprimed: never sheds cold
+    b.submit(3, block=False)
+    b.flush()
+    assert b.estimated_delay() == pytest.approx(0.2)    # first wave primes
+    b.close()
+
+
+def test_shed_rejects_doomed_deadline_with_typed_overloaded(graph, engine):
+    """Admission control: a deadline the backlog already dooms is refused
+    up front so it fails in microseconds, not after a full queue wait."""
+    clock = FakeClock()
+    b = DynamicBatcher(engine, window=1.0, max_batch=4, clock=clock,
+                       shed=True, service_hint=1.0)
+    ok = b.submit(3, block=False, deadline=10.0)        # 1.0s est <= 10s
+    with pytest.raises(Overloaded):
+        b.submit(5, block=False, deadline=0.4)          # 1.25s est > 0.4s
+    b.submit(7, block=False)                # no deadline: never shed
+    b.flush()
+    assert ok.exception() is None
+    s = b.stats()
+    assert s["shed"] == 1 and s["requests"] == 2
+    b.close()
+
+
+def test_shed_off_queues_doomed_deadline(engine):
+    b = DynamicBatcher(engine, window=1.0, clock=FakeClock(),
+                       service_hint=5.0)   # shed=False (default)
+    f = b.submit(3, block=False, deadline=0.01)
+    b.flush()
+    assert f.done() and "shed" not in b.stats()
+    b.close()
+
+
+def test_cancel_pending_pops_without_resolving(graph, engine):
+    csr, _ = graph
+    b = DynamicBatcher(engine, window=1.0, clock=FakeClock())
+    futs = [b.submit(r, block=False, deadline=5.0) for r in (3, 5, 9)]
+    popped = b.cancel_pending()
+    assert popped == futs and b.backlog() == 0
+    assert not any(f.done() for f in popped)
+    assert b.flush() == []                  # queue really is empty
+    # the pool's redispatch path: transplant onto another batcher with
+    # submit-time deadline/clock state intact
+    b2 = DynamicBatcher(engine, window=1.0, clock=FakeClock())
+    for f in popped:
+        b2._submit_future(f)
+    b2.flush()
+    for f, r in zip(popped, (3, 5, 9)):
+        assert f.t_deadline == 5.0
+        np.testing.assert_array_equal(np.asarray(f.result(), np.int64),
+                                      bfs_oracle(csr, r))
+    b.close()
+    b2.close()
+
+
+def test_submit_future_respects_capacity_and_close(engine):
+    b = DynamicBatcher(engine, window=1.0, max_pending=1,
+                       clock=FakeClock())
+    f = b.submit(3, block=False)
+    b.cancel_pending()
+    b.submit(5, block=False)
+    with pytest.raises(QueueFull):
+        b._submit_future(f)
+    b.flush()
+    b.close()
+    with pytest.raises(BatcherClosed):
+        b._submit_future(f)
+
+
+def test_consecutive_failures_streak_resets_on_success(graph, engine):
+    clock = FakeClock()
+    timed = TimedEngine(engine, clock, fails_left=2)
+    b = DynamicBatcher(timed, window=1.0, clock=clock)
+    for want in (1, 2):
+        b.submit(3, block=False)
+        b.flush()
+        assert b.consecutive_failures == want
+    assert b.stats()["consecutive_failures"] == 2
+    b.submit(3, block=False)                # engine healthy again
+    b.flush()
+    assert b.consecutive_failures == 0
+    assert "consecutive_failures" not in b.stats()
+    b.close()
+
+
+def test_failure_handler_takes_ownership_of_failing_futures(graph, engine):
+    """A True-returning handler owns the future: the batcher neither
+    resolves nor books it, and the streak still advances (the pool's
+    eviction signal must see every engine failure)."""
+    clock = FakeClock()
+    handled = []
+
+    def handler(fut, exc):
+        handled.append((fut, exc))
+        return len(handled) == 1            # own the first, decline later
+
+    timed = TimedEngine(engine, clock, fails_left=2)
+    b = DynamicBatcher(timed, window=1.0, clock=clock,
+                       failure_handler=handler)
+    f1 = b.submit(3, block=False)
+    b.flush()
+    assert not f1.done()                    # handed off, not resolved
+    f2 = b.submit(5, block=False)
+    b.flush()
+    assert f2.done()                        # handler declined: fails here
+    assert isinstance(f2.exception(), RuntimeError)
+    assert [f for f, _ in handled] == [f1, f2]
+    assert b.consecutive_failures == 2
+    assert b.stats()["requests_failed"] == 1    # only the declined one
+    f1._fail(RuntimeError("resolved by the test, standing in for a pool"))
+    b.close()
+
+
+def test_failure_handler_exception_is_contained(graph, engine):
+    clock = FakeClock()
+    timed = TimedEngine(engine, clock, fails_left=1)
+    b = DynamicBatcher(timed, window=1.0, clock=clock,
+                       failure_handler=lambda f, e: 1 / 0)
+    f = b.submit(3, block=False)
+    b.flush()                               # handler blew up: treat as False
+    assert f.done() and isinstance(f.exception(), RuntimeError)
+    b.close()

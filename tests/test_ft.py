@@ -201,8 +201,10 @@ def test_transient_fault_retries_and_succeeds():
     eng = ScriptedEngine(script=[InjectedFailure("flaky"),
                                  KernelFault("flaky")])
     slept = []
+    # jitter=False pins the legacy deterministic exponential schedule;
+    # the (default) decorrelated-jitter path has its own divergence test
     sup = make_supervisor(eng, max_retries=2, backoff=0.01,
-                          sleep=slept.append)
+                          sleep=slept.append, jitter=False)
     wave = sup.run_wave([1, 2])
     assert wave.n_ok == 2
     assert wave.traversals == 3 and wave.retries == 2
@@ -610,3 +612,30 @@ def test_run_wave_deadline_guards_cold_engine():
     assert wave.timeouts == 1 and wave.retries == 1
     assert sup._wave_deadline_override is None  # per-wave: cleared
     assert sup.current_deadline() is None       # still cold-derived
+
+
+def test_jitter_backoff_within_envelope_and_decorrelated():
+    """Satellite: decorrelated-jitter retry backoff.  Every jittered
+    delay stays inside [backoff, backoff_cap] (next draw additionally
+    bounded by 3x the previous delay), and two default-seeded
+    supervisors facing the SAME fault schedule back off on DIFFERENT
+    schedules — pool workers sharing a fault must not retry in
+    lockstep."""
+    def run_once(seed=None):
+        eng = ScriptedEngine(script=[InjectedFailure("correlated")] * 4)
+        sup = make_supervisor(eng, max_retries=4, backoff=0.01,
+                              backoff_cap=0.5, sleep=lambda s: None,
+                              jitter_seed=seed)
+        assert sup.run_wave([1, 2]).n_ok == 2
+        return list(sup.backoff_log)
+
+    log = run_once()
+    assert len(log) == 4
+    assert log[0] == 0.01                   # first retry waits the base
+    for prev, d in zip(log, log[1:]):
+        assert 0.01 <= d <= min(0.5, 3.0 * max(prev, 0.01 / 3))
+    # OS-entropy seeding: two supervisors' schedules diverge
+    assert run_once() != run_once()
+    # explicit seeding restores determinism (and distinct seeds differ)
+    assert run_once(seed=7) == run_once(seed=7)
+    assert run_once(seed=7) != run_once(seed=8)

@@ -1,0 +1,265 @@
+"""Traversal integrity layer (``repro.ft.integrity`` + engine guards).
+
+Three layers under test, cheapest to strongest:
+
+* statvec protocol invariants — per-level discovery popcounts recorded by
+  every integrity-enabled run must be positive-then-terminate with the
+  cumulative total bounded by |V| x planes, across every vertex program
+  (BFS/CC/SSSP), batch width (1 / one word / multi-word), and both
+  compute paths (jnp and Pallas), without breaking the
+  ``host_transfers == iterations + 2`` protocol;
+* detection — a single injected plane-word or result-row bit flip must
+  raise :class:`IntegrityError` (the engine's device residue / witness
+  reduction, or the host row-bounds check);
+* recovery — the supervisor classifies the violation as a kernel-class
+  transient fault and the retried wave serves oracle-matching rows.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ConnectedComponentsRunner, IntegrityError,
+                        MultiSourceBFSRunner, SSSPRunner, bfs_oracle,
+                        build_local_graph)
+from repro.core.bfs_local import INF
+from repro.core.vertex_program import SV_CHECK, _witness_check
+from repro.ft import EngineSupervisor, FaultPlan, FaultyEngine
+from repro.ft.integrity import (INTEGRITY_MODES, IntegrityConfig,
+                                check_level_rows, check_popcount_sequence)
+from repro.ft.supervisor import TRANSIENT, classify_fault, is_kernel_fault
+from repro.graph import csr_from_edges, transpose_csr, uniform_edges
+
+N = 256
+RUNNERS = {"bfs": MultiSourceBFSRunner, "cc": ConnectedComponentsRunner,
+           "sssp": SSSPRunner}
+
+
+@pytest.fixture(scope="module")
+def graph():
+    src, dst = uniform_edges(N, 1024, seed=7)
+    csr = csr_from_edges(src, dst, N)
+    return csr, build_local_graph(csr, transpose_csr(csr))
+
+
+@pytest.fixture(scope="module")
+def roots48(graph):
+    deg = np.diff(graph[0].indptr)
+    reachable = np.flatnonzero(deg > 0)
+    return np.resize(reachable, 48).astype(np.int64)
+
+
+def _far_vertex(csr, root: int) -> int:
+    """A vertex the oracle puts at level >= 3 (or unreached) from
+    ``root``: XOR-ing its plane bit at level 1 always PLANTS a spurious
+    discovery, which the statvec residue must catch."""
+    lv = bfs_oracle(csr, root)
+    far = np.flatnonzero((lv >= 3) | (lv == INF))
+    assert far.size, "graph too dense for a far vertex"
+    return int(far[0])
+
+
+# ---------------------------------------------------------------------------
+# Statvec protocol invariants across the program x batch x path matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["jnp", "pallas"])
+@pytest.mark.parametrize("batch", [1, 32, 48])
+@pytest.mark.parametrize("algo", sorted(RUNNERS))
+def test_popcount_protocol_invariants(graph, roots48, algo, batch,
+                                      use_pallas):
+    """Every integrity-enabled run's discovery popcounts are
+    positive-then-terminate, non-negative, and bounded — and the one
+    extra statvec slot costs no extra device->host sync."""
+    runner = RUNNERS[algo](graph[1], use_pallas=use_pallas,
+                           integrity="invariants")
+    res = runner.run(roots48[:batch])
+    pcs = runner.last_stats["discovery_popcounts"]
+    check_popcount_sequence(pcs)            # must not raise
+    assert all(p >= 0 for p in pcs)
+    if len(pcs) > 1:
+        assert pcs[-1] == 0                 # frontier drained
+        assert all(p > 0 for p in pcs[:-1])
+    # cumulative discoveries are monotone and bounded by |V| x planes
+    cum = np.cumsum(pcs)
+    assert np.all(np.diff(cum) >= 0)
+    assert cum[-1] <= N * batch
+    assert runner.last_stats["integrity"]["sv_checks"] == len(pcs)
+    # the residue slot rides the fused statvec: same sync count as off
+    assert res.host_transfers == res.iterations + 2
+
+
+def test_witness_mode_keeps_protocol_and_reports(graph, roots48):
+    """Witness reduction rides the final fetch: no extra transfer, and
+    the stats block reports the sample size (clipped to |V|)."""
+    runner = MultiSourceBFSRunner(graph[1], integrity="witness",
+                                  witness_k=4 * N)
+    res = runner.run(roots48[:32])
+    st = runner.last_stats["integrity"]
+    assert st["mode"] == "witness"
+    assert st["witness_sampled"] == N       # clipped to |V|
+    assert st["witness_truncated"] is False
+    assert res.host_transfers == res.iterations + 2
+
+
+# ---------------------------------------------------------------------------
+# Detection: injected single-bit corruption raises IntegrityError
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["invariants", "witness"])
+def test_plane_flip_detected_by_device_residue(graph, roots48, mode):
+    csr, g = graph
+    runner = MultiSourceBFSRunner(g, integrity=mode)
+    roots = roots48[:32]
+    runner._corrupt_plane = (1, _far_vertex(csr, int(roots[0])), 0)
+    with pytest.raises(IntegrityError):
+        runner.run(roots)
+    assert runner._corrupt_plane is None    # exact-once: hook consumed
+
+
+def test_result_flip_detected_by_host_row_bounds(graph, roots48):
+    """Bit 16 lands every level (and INF) outside [0, iterations]."""
+    csr, g = graph
+    runner = MultiSourceBFSRunner(g)
+    roots = roots48[:32]
+    res = runner.run(roots)
+    rows = np.array(res.levels)
+    v = _far_vertex(csr, int(roots[0]))
+    rows[0, v] ^= np.int32(1 << 16)
+    with pytest.raises(IntegrityError):
+        check_level_rows(rows, roots, iterations=res.iterations)
+
+
+def test_witness_reduction_flags_parentless_discovery(graph, roots48):
+    """A vertex whose claimed level has no in-neighbor one level closer
+    is exactly what the fused witness predicate counts."""
+    csr, g = graph
+    roots = roots48[:4]
+    runner = MultiSourceBFSRunner(g)
+    value = jnp.asarray(np.array(runner.run(roots).levels).T)  # [n, B]
+    w = _far_vertex(csr, int(roots[0]))
+    sample = jnp.asarray([w], jnp.int32)
+    viol, trunc = (int(x) for x in
+                   _witness_check(g, value, sample, budget=4096))
+    assert viol == 0 and trunc == 0         # clean value rows pass
+    bad = value.at[w, 0].set(1)             # claims level 1, no parent at 0
+    viol, trunc = (int(x) for x in
+                   _witness_check(g, bad, sample, budget=4096))
+    assert viol >= 1 and trunc == 0
+
+
+# ---------------------------------------------------------------------------
+# Host-side check units
+# ---------------------------------------------------------------------------
+
+def test_check_level_rows_accepts_clean_and_rejects_corruption():
+    rows = np.asarray([[0, 1, 2, INF], [1, 0, INF, 2]], np.int32)
+    roots = np.asarray([0, 1])
+    check_level_rows(rows, roots, iterations=2)
+    bad = rows.copy()
+    bad[1, 3] = 7                           # outside [0, iterations]
+    with pytest.raises(IntegrityError, match="outside"):
+        check_level_rows(bad, roots, iterations=2)
+    lost = rows.copy()
+    lost[0, 0] = 3                          # plane 0 lost its own root
+    with pytest.raises(IntegrityError, match="lost its root"):
+        check_level_rows(lost, roots, iterations=3)
+    with pytest.raises(IntegrityError):
+        check_level_rows(rows - 1, roots)   # negative values, no bound
+
+
+@pytest.mark.parametrize("pcs,msg", [
+    ([], "empty"),
+    ([3, -1, 0], "negative"),
+    ([0, 2, 0], "roots must seed"),
+    ([4, 0, 3, 0], "hit 0 at level 1"),
+    ([4, 2], "not drained"),
+])
+def test_check_popcount_sequence_rejects(pcs, msg):
+    with pytest.raises(IntegrityError, match=msg):
+        check_popcount_sequence(pcs)
+
+
+def test_check_popcount_sequence_accepts():
+    check_popcount_sequence([32])           # single-level (all roots leaf)
+    check_popcount_sequence([32, 100, 7, 0])
+
+
+def test_integrity_config_validation():
+    assert IntegrityConfig().mode in INTEGRITY_MODES
+    with pytest.raises(ValueError):
+        IntegrityConfig(mode="paranoid")
+    with pytest.raises(ValueError):
+        IntegrityConfig(audit_rate=1.5)
+    cfg = IntegrityConfig(mode="audit", audit_rate=0.5)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.mode = "off"
+
+
+def test_integrity_error_is_kernel_class_transient():
+    """Violations ride the retry + pallas->jnp->bool-plane ladder: they
+    must classify transient (retryable) AND kernel-shaped (demotable)."""
+    err = IntegrityError("corrupt frontier word")
+    assert classify_fault(err) == TRANSIENT
+    assert is_kernel_fault(err)
+
+
+# ---------------------------------------------------------------------------
+# Recovery: supervisor retries flipped waves to oracle-matching rows
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["plane_flip", "result_flip"])
+def test_supervisor_detects_and_recovers_bit_flip(graph, roots48, kind):
+    csr, g = graph
+    roots = roots48[:32]
+    far = _far_vertex(csr, int(roots[0]))
+    spec = {"plane_flip": dict(plane_flip=(1, far, 0)),
+            "result_flip": dict(result_flip=(0, far, 16))}[kind]
+    runner = MultiSourceBFSRunner(g)
+    chaos = FaultyEngine(runner, FaultPlan([(0, kind)]), **spec)
+    sup = EngineSupervisor(chaos, watchdog=False, backoff=0.0,
+                           integrity=IntegrityConfig(mode="witness"))
+    try:
+        wave = sup.run_wave(roots)
+    finally:
+        runner.integrity = "off"            # knobs pushed onto the runner
+    assert len(chaos.flips) == 1 and chaos.flips[0]["kind"] == kind
+    assert wave.n_failed == 0               # detected, retried, recovered
+    st = sup.stats()["integrity"]
+    assert st["violations"] >= 1 and st["checks"] >= 1
+    assert sup.stats()["retries"] >= 1
+    for o in wave.outcomes:
+        np.testing.assert_array_equal(np.asarray(o.levels, np.int64),
+                                      bfs_oracle(csr, o.root))
+
+
+def test_audit_tier_samples_clean_waves(graph, roots48):
+    """audit_rate=1.0 re-runs every clean wave through the reference
+    path; a clean engine must audit clean (zero false positives)."""
+    runner = MultiSourceBFSRunner(graph[1])
+    sup = EngineSupervisor(runner, watchdog=False, backoff=0.0,
+                           integrity=IntegrityConfig(mode="audit",
+                                                     audit_rate=1.0))
+    try:
+        wave = sup.run_wave(roots48[:32])
+    finally:
+        runner.integrity = "off"
+    assert wave.n_failed == 0
+    st = sup.stats()["integrity"]
+    assert st["audits"] == 1 and st["audit_failures"] == 0
+    assert st["violations"] == 0
+
+
+def test_audit_rate_zero_never_audits(graph, roots48):
+    runner = MultiSourceBFSRunner(graph[1])
+    sup = EngineSupervisor(runner, watchdog=False, backoff=0.0,
+                           integrity=IntegrityConfig(mode="audit",
+                                                     audit_rate=0.0))
+    try:
+        for _ in range(3):
+            assert sup.run_wave(roots48[:32]).n_failed == 0
+    finally:
+        runner.integrity = "off"
+    assert sup.stats()["integrity"]["audits"] == 0

@@ -12,8 +12,8 @@ import pytest
 
 from repro.core import MultiSourceBFSRunner, bfs_oracle, build_local_graph
 from repro.graph import csr_from_edges, transpose_csr, uniform_edges
-from repro.launch.dynbatch import BatcherClosed, QueueFull
-from repro.launch.pool import WorkerPool
+from repro.launch.dynbatch import BatcherClosed, Overloaded, QueueFull
+from repro.launch.pool import EVICTED, HEALTHY, SUSPECT, WorkerPool
 
 
 class FakeClock:
@@ -173,3 +173,164 @@ def test_threaded_pipelined_pool_matches_oracle(graph, engines):
                                       bfs_oracle(csr, r))
     s = pool.stats()
     assert s["pipeline"] is True and s["requests"] == len(roots)
+
+
+# ---------------------------------------------------------------------------
+# Health state machine: eviction, redispatch, probe re-admission, shedding
+# ---------------------------------------------------------------------------
+
+class DeadEngine:
+    """BFSEngine-protocol double for a permanently dead worker."""
+
+    num_vertices = 256
+
+    def __init__(self):
+        self.calls = 0
+
+    def run_batch(self, roots, **kw):
+        self.calls += 1
+        raise RuntimeError("engine dead")
+
+
+def test_pool_validates_health_thresholds(graph, engines):
+    with pytest.raises(ValueError):
+        WorkerPool(engines, evict_after=0)
+    with pytest.raises(ValueError):
+        WorkerPool(engines, evict_after=2, suspect_after=3)
+
+
+def test_dead_worker_evicted_within_threshold_all_futures_resolve(graph):
+    """Tentpole acceptance: a permanently dead engine is evicted after
+    exactly ``evict_after`` failing waves, every queued and in-flight
+    future is redispatched to the survivor, and all resolve correctly —
+    zero hangs, zero request-level errors."""
+    csr, g = graph
+    dead = DeadEngine()
+    engines = [dead, MultiSourceBFSRunner(g)]
+    deg = np.asarray(engines[1].out_deg)
+    pool = WorkerPool(engines, out_deg=deg, evict_after=2, window=1.0,
+                      max_batch=2, clock=FakeClock())
+    roots = [2, 50, 100, 150, 200, 250, 33, 77]
+    futures = [pool.submit(r, block=False) for r in roots]
+    pool.flush()                            # loops until redispatches quiesce
+    assert all(f.done() for f in futures)
+    for f, r in zip(futures, roots):
+        assert f.exception() is None, f"root {r}: {f.exception()!r}"
+        np.testing.assert_array_equal(np.asarray(f.result(), np.int64),
+                                      bfs_oracle(csr, r))
+    s = pool.stats()
+    assert s["health"] == [EVICTED, HEALTHY]
+    assert s["evictions"] == 1
+    assert s["redispatches"] >= 4           # dead worker's share traveled
+    assert "requests_failed" not in s
+    # evicted exactly at the threshold: the dead engine saw evict_after
+    # failing waves and not one more
+    assert s["per_worker"][0]["errors"] == 2 and dead.calls == 2
+    pool.close(drain=True)                  # evicted worker skips drain
+
+
+def test_probe_readmits_with_replacement_engine(graph):
+    csr, g = graph
+    pool = WorkerPool([DeadEngine(), MultiSourceBFSRunner(g)],
+                      evict_after=1, window=1.0, clock=FakeClock(),
+                      engine_factory=lambda idx: MultiSourceBFSRunner(g))
+    f = pool.workers[0].submit(7, block=False)
+    pool.flush()
+    assert pool.health() == [EVICTED, HEALTHY]
+    assert f.exception() is None            # redispatched to the survivor
+    assert pool.probe_evicted() == 1
+    assert pool.health() == [HEALTHY, HEALTHY]
+    f2 = pool.workers[0].submit(9, block=False)   # rebuilt worker serves
+    pool.flush()
+    np.testing.assert_array_equal(np.asarray(f2.result(), np.int64),
+                                  bfs_oracle(csr, 9))
+    s = pool.stats()
+    assert s["probes"] == 1 and s["probe_failures"] == 0
+    pool.close()
+
+
+def test_probe_without_factory_keeps_dead_worker_evicted(graph):
+    _, g = graph
+    pool = WorkerPool([DeadEngine(), MultiSourceBFSRunner(g)],
+                      evict_after=1, window=1.0, clock=FakeClock())
+    pool.workers[0].submit(7, block=False)
+    pool.flush()
+    assert pool.probe_evicted() == 0        # dead engine fails its probe
+    assert pool.health() == [EVICTED, HEALTHY]
+    s = pool.stats()
+    assert s["probes"] == 1 and s["probe_failures"] == 1
+    pool.close()
+
+
+def test_suspect_worker_ranked_last_then_recovers(graph, engines):
+    """One failing wave marks a worker SUSPECT (ranked last for new
+    work); its next successful wave re-admits it to HEALTHY."""
+    from repro.ft import FaultPlan, FaultyEngine
+
+    _, g = graph
+    flaky = FaultyEngine(engines[0], FaultPlan([(0, "kernel")]))
+    pool = WorkerPool([flaky, engines[1]], evict_after=3, suspect_after=1,
+                      window=1.0, clock=FakeClock())
+    f = pool.workers[0].submit(5, block=False)
+    pool.flush()
+    assert pool.health() == [SUSPECT, HEALTHY]
+    assert f.exception() is None            # redispatched to worker 1
+    pool.submit(11, block=False)            # routing shuns the suspect
+    assert pool.workers[0].backlog() == 0
+    assert pool.workers[1].backlog() == 1
+    pool.flush()
+    f2 = pool.workers[0].submit(13, block=False)  # fault plan exhausted
+    pool.flush()
+    assert f2.exception() is None
+    assert pool.health() == [HEALTHY, HEALTHY]
+    pool.close()
+
+
+def test_pool_shed_rejects_doomed_deadline_typed(graph, engines):
+    """Pool-level admission control: when even the best worker's
+    estimated queue delay exceeds the deadline, submit raises a typed
+    Overloaded instead of queueing a guaranteed SLO miss."""
+    pool = WorkerPool(engines, shed=True, window=1.0, clock=FakeClock(),
+                      service_hint=1.0)
+    ok = pool.submit(3, block=False, deadline=10.0)     # admissible
+    with pytest.raises(Overloaded):
+        pool.submit(5, block=False, deadline=0.25)      # est 1.0s > 0.25s
+    pool.submit(7, block=False)             # no deadline: never shed
+    pool.flush()
+    assert ok.exception() is None
+    assert pool.stats()["shed"] == 1
+    pool.close()
+
+
+def test_all_workers_evicted_raises_overloaded(graph):
+    pool = WorkerPool([DeadEngine()], evict_after=1, window=1.0,
+                      clock=FakeClock())
+    f = pool.submit(3, block=False)
+    pool.flush()
+    # no survivor to absorb the future: it fails typed, never hangs
+    assert isinstance(f.exception(), RuntimeError)
+    assert pool.health() == [EVICTED]
+    with pytest.raises(Overloaded, match="evicted"):
+        pool.submit(5, block=False)         # inline probe fails, refuse
+    s = pool.stats()
+    assert s["probes"] == 1 and s["probe_failures"] == 1
+    pool.close()
+
+
+def test_close_drain_never_redispatches_onto_closing_workers(graph):
+    """Shutdown-vs-eviction ordering: the pool marks itself closed FIRST,
+    so a worker failing during its drain fails its futures with the real
+    engine error instead of requeueing them onto workers that are closing
+    (or already closed) underneath it."""
+    _, g = graph
+    pool = WorkerPool([MultiSourceBFSRunner(g), DeadEngine()],
+                      evict_after=2, window=1.0, clock=FakeClock())
+    ok = pool.workers[0].submit(3, block=False)
+    doomed = [pool.workers[1].submit(r, block=False) for r in (5, 9)]
+    pool.close(drain=True)                  # worker 0 closes before 1 fails
+    assert ok.done() and ok.exception() is None
+    for f in doomed:
+        assert f.done()
+        assert isinstance(f.exception(), RuntimeError)
+        assert not isinstance(f.exception(), BatcherClosed)
+    assert "redispatches" not in pool.stats()
